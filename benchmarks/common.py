@@ -1,0 +1,81 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Scale note: the paper streams the full datasets (6.5k-25k items).  On this
+1-core CPU container each benchmark defaults to a reduced stream
+(--samples) so the whole suite finishes in minutes; pass --full for
+paper-scale runs.  Budgets N are scaled proportionally.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    OnlineCascade, OnlineEnsemble, SimulatedExpert, default_cascade_config,
+    distill_students)
+from repro.data import make_stream
+
+ART_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts/benchmarks")
+
+EXPERTS = {"gpt-3.5-turbo": "GPT-3.5 Turbo",
+           "llama-2-70b-chat": "Llama 2 70B Chat"}
+
+
+def art_path(name: str) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    return os.path.join(ART_DIR, name)
+
+
+def save_json(name: str, obj) -> str:
+    p = art_path(name)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return p
+
+
+def run_cascade(dataset: str, expert_name: str, mu: float, *, samples: int,
+                seed: int = 0, order: str = "default",
+                hard_budget=None, large: bool = False) -> dict:
+    stream = make_stream(dataset, seed=seed, n_samples=samples, order=order)
+    expert = SimulatedExpert(stream, expert_name)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
+                                 seed=seed, large=large)
+    if hard_budget is not None:
+        from dataclasses import replace
+        cfg = replace(cfg, hard_budget=hard_budget)
+    cas = OnlineCascade(cfg, expert)
+    t0 = time.time()
+    m = cas.run(stream)
+    m["seconds"] = time.time() - t0
+    m["us_per_call"] = m["seconds"] / max(samples, 1) * 1e6
+    m.pop("predictions", None)
+    m["expert_accuracy"] = float(
+        np.mean(stream.expert_labels(expert_name) == stream.labels))
+    m["history_level"] = cas.history["level"]
+    m["history_J"] = cas.history["J"]
+    return m
+
+
+def run_ensemble(dataset: str, expert_name: str, budget: int, *,
+                 samples: int, seed: int = 0, order: str = "default",
+                 decay: float = 0.999) -> dict:
+    stream = make_stream(dataset, seed=seed, n_samples=samples, order=order)
+    expert = SimulatedExpert(stream, expert_name)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, seed=seed)
+    ens = OnlineEnsemble(cfg, expert, expert_prob_decay=decay)
+    m = ens.run(stream, hard_budget=budget)
+    m.pop("predictions", None)
+    return m
+
+
+def run_distill(dataset: str, expert_name: str, budget: int, *,
+                samples: int, seed: int = 0) -> dict:
+    stream = make_stream(dataset, seed=seed, n_samples=samples)
+    expert = SimulatedExpert(stream, expert_name)
+    res = distill_students(stream, expert, budget_n=budget, epochs=3,
+                           seed=seed)
+    res.pop("test_idx", None)
+    return res

@@ -1,0 +1,80 @@
+"""Paper Appendix C.1: training & inference cost equilibrium, rebuilt from
+our FLOP model (TPU deployment, DESIGN.md §4).
+
+Reports per-model FLOPs, the cascade's relative cost units (LR = 1), and
+the equilibrium M = xC / (3 - 2x): the largest aggregate student size that
+still saves cost when students handle x of the queries.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save_json
+from repro.configs import get_config, list_architectures
+from repro.metrics.costs import (
+    expert_decode_flops, expert_prefill_flops, lr_flops, tinytf_flops)
+from repro.models.students import LRSpec, TinyTFSpec
+
+
+def run(doc_len: int = 512, quick: bool = False):
+    lr_spec = LRSpec()
+    tf_spec = TinyTFSpec()
+    out = {
+        "students": {
+            "lr_inference_flops": lr_flops(lr_spec),
+            "lr_train_flops": lr_flops(lr_spec, train=True),
+            "tinytf_inference_flops": tinytf_flops(tf_spec),
+            "tinytf_train_flops": tinytf_flops(tf_spec, train=True),
+        },
+        "experts": {},
+        "equilibrium": {},
+    }
+    archs = list_architectures() if not quick else ["internlm2-1.8b",
+                                                    "mixtral-8x22b"]
+    base = lr_flops(lr_spec)
+    for arch in archs:
+        cfg = get_config(arch)
+        pf = expert_prefill_flops(cfg, doc_len)
+        out["experts"][arch] = {
+            "prefill_flops": pf,
+            "decode_flops_32k": expert_decode_flops(cfg, 32768),
+            "cost_units_vs_lr": pf / base,
+        }
+    # paper C.1: 100%*C = x*M + (1-x)*(M + 2M + C)  =>  M = xC/(3-2x)
+    C = out["experts"].get("mixtral-8x22b",
+                           list(out["experts"].values())[0])[
+        "prefill_flops"]
+    for x in (0.3, 0.5, 0.7, 0.9):
+        M = x * C / (3 - 2 * x)
+        out["equilibrium"][f"x={x}"] = {
+            "max_student_flops": M,
+            "paper_formula": "M = xC/(3-2x)",
+        }
+    students_total = (out["students"]["lr_inference_flops"]
+                      + out["students"]["tinytf_inference_flops"])
+    out["cascade_students_total_flops"] = students_total
+    out["students_below_equilibrium_at_x=0.5"] = bool(
+        students_total < out["equilibrium"]["x=0.5"]["max_student_flops"])
+    print(f"LR={out['students']['lr_inference_flops']:.2e} FLOPs, "
+          f"tinyTF={out['students']['tinytf_inference_flops']:.2e} FLOPs")
+    for arch, d in out["experts"].items():
+        print(f"{arch}: prefill({doc_len})={d['prefill_flops']:.3e} FLOPs "
+              f"= {d['cost_units_vs_lr']:.1e} LR-units")
+    print(f"equilibrium x=0.5: students may aggregate up to "
+          f"{out['equilibrium']['x=0.5']['max_student_flops']:.3e} FLOPs; "
+          f"ours={students_total:.3e} -> saves="
+          f"{out['students_below_equilibrium_at_x=0.5']}")
+    save_json("cost_equilibrium.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doc-len", type=int, default=512)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.doc_len, args.quick)
+
+
+if __name__ == "__main__":
+    main()

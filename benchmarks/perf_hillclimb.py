@@ -1,0 +1,127 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+For a chosen (arch, shape) pair this runs the paper-faithful baseline and a
+ladder of candidate changes (each an explicit dry-run option), recording
+the three roofline terms before/after into artifacts/perf/.  The napkin
+math and confirmed/refuted verdicts are written into EXPERIMENTS.md §Perf
+by hand — this driver produces the measurements.
+
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb \
+      --arch llama3-405b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+# candidate ladders per step kind; each entry: (name, hypothesis, kwargs)
+TRAIN_LADDER = [
+    ("baseline", "paper-faithful: AdamW fp32, remat, TP+DP sharding", {}),
+    ("zero", "ZeRO-shard optimizer moments over data: HBM/dev down by "
+             "~8B/param/dp; no FLOP/collective change in the step itself",
+     {"zero": True}),
+    ("bf16_opt", "bf16 moments halve optimizer bytes again",
+     {"zero": True, "opt_dtype": "bfloat16"}),
+    ("seq_parallel", "shard activation seq dim over model: scan carries "
+                     "/16, TP all-reduce -> RS/AG halves wire bytes",
+     {"zero": True, "opt_dtype": "bfloat16", "seq_parallel": True}),
+    ("loss_chunk", "chunk the softmax xent: (B,S,V) fp32 logits+grad "
+                   "never materialized",
+     {"zero": True, "opt_dtype": "bfloat16", "seq_parallel": True,
+      "loss_chunk": 512}),
+]
+
+PREFILL_LADDER = [
+    ("baseline", "paper-faithful prefill sharding", {}),
+    ("seq_parallel", "seq-parallel activations: carries and norms sharded "
+                     "over model", {"seq_parallel": True}),
+]
+
+DECODE_LADDER = [
+    ("baseline", "paper-faithful decode sharding (weights TP over model, "
+                 "replicated over data)", {}),
+    ("fsdp_weights", "serving has no optimizer binding weights to data "
+                     "ranks: shard every weight's first free dim over "
+                     "(pod,data) too -> weight bytes/dev /=dp at the cost "
+                     "of an all-gather per use; decode is weight-read "
+                     "bound so HBM/dev should drop sharply",
+     {"shard_params_data": True}),
+]
+
+MOE_EXTRA = [
+    ("expert_parallel", "shard the expert dim over model instead of "
+                        "expert-ff: full-width expert GEMMs, dispatch "
+                        "replicated, same psum",
+     {"moe_mode": "expert"}),
+]
+
+
+def run(arch: str, shape: str, out_dir: str = "artifacts/perf"):
+    from repro.configs import get_config
+    from repro.launch.dryrun import dryrun_one
+
+    cfg = get_config(arch)
+    if shape == "train_4k":
+        ladder = list(TRAIN_LADDER)
+    elif shape == "prefill_32k":
+        ladder = list(PREFILL_LADDER)
+    else:
+        ladder = list(DECODE_LADDER)
+    if cfg.moe is not None and cfg.moe.num_experts % 16 == 0:
+        ladder += [(n, h, {**ladder[-1][2], **kw})
+                   for n, h, kw in MOE_EXTRA]
+
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    base = None
+    for name, hypothesis, kwargs in ladder:
+        print(f"\n### {arch} x {shape} :: {name}")
+        print(f"hypothesis: {hypothesis}", flush=True)
+        try:
+            r = dryrun_one(arch, shape, **kwargs)
+        except Exception as e:  # noqa: BLE001
+            print(f"variant {name} FAILED: {e!r}")
+            results.append({"variant": name, "hypothesis": hypothesis,
+                            "error": repr(e)[:300]})
+            continue
+        r["variant"] = name
+        r["hypothesis"] = hypothesis
+        if base is None:
+            base = r
+        t, tb = r["roofline"], base["roofline"]
+        r["delta_vs_baseline"] = {
+            "compute_s": t["compute_s"] - tb["compute_s"],
+            "memory_s": t["memory_s"] - tb["memory_s"],
+            "collective_s": t["collective_s"] - tb["collective_s"],
+            "hbm_gb": r["hbm_per_device_gb"] - base["hbm_per_device_gb"],
+        }
+        print(f"delta vs baseline: {r['delta_vs_baseline']}")
+        results.append(r)
+        with open(os.path.join(out_dir,
+                               f"{arch}__{shape}__{name}.json"), "w") as f:
+            json.dump(r, f, indent=1)
+    with open(os.path.join(out_dir, f"{arch}__{shape}__ladder.json"),
+              "w") as f:
+        json.dump([{k: v for k, v in r.items()
+                    if k in ("variant", "hypothesis", "roofline",
+                             "hbm_per_device_gb", "fits_hbm",
+                             "collective_bytes_per_device",
+                             "flops_per_device", "bytes_per_device",
+                             "delta_vs_baseline", "error")}
+                   for r in results], f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Appendix B.1: the prefill-cost experiment, on TPU terms.
+
+The paper measured 3.6 s to prefill one 8192-token prompt on 8xA100
+(LLaMA-65B, unbatched — batching OOMed).  We derive the equivalent for our
+expert zoo on the v5e production mesh from the roofline model: analytic
+FLOPs/bytes per prefill vs chip peaks, plus the flash-attention memory
+bound that makes batched 8k prefill feasible at all (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save_json
+from repro.configs import get_config, list_architectures
+from repro.metrics.costs import expert_prefill_flops
+from repro.metrics.roofline import V5E
+
+PAPER_BASELINE = {"model": "llama-65b", "gpus": "8xA100",
+                  "seconds_per_8k_prompt": 3.6, "batch": 1,
+                  "note": "batching OOMed (quadratic attention)"}
+
+
+def run(seq: int = 8192, chips: int = 256, quick: bool = False):
+    rows = []
+    archs = list_architectures() if not quick else ["llama3-405b",
+                                                    "mixtral-8x22b"]
+    for arch in archs:
+        cfg = get_config(arch)
+        flops = expert_prefill_flops(cfg, seq)
+        t_compute = flops / (chips * V5E.peak_flops)
+        # weights read once per prefill (memory bound floor)
+        wbytes = cfg.active_param_count() * 2
+        t_memory = wbytes / (chips * V5E.hbm_bw)
+        t = max(t_compute, t_memory)
+        rows.append({
+            "arch": arch, "seq": seq, "chips": chips,
+            "prefill_flops": flops,
+            "seconds_per_prompt": t,
+            "compute_s": t_compute, "memory_s": t_memory,
+            "speedup_vs_paper_baseline": PAPER_BASELINE[
+                "seconds_per_8k_prompt"] / t,
+        })
+        print(f"{arch}: prefill({seq}) = {flops:.3e} FLOPs -> "
+              f"{t*1000:.2f} ms on {chips}xv5e "
+              f"({rows[-1]['speedup_vs_paper_baseline']:.0f}x the paper's "
+              f"8xA100 65B baseline)", flush=True)
+    out = {"paper_baseline": PAPER_BASELINE, "rows": rows}
+    save_json("prefill_cost.json", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=8192)
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.seq, args.chips, args.quick)
+
+
+if __name__ == "__main__":
+    main()

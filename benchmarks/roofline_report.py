@@ -1,0 +1,115 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+roofline table and nominate the three hillclimb pairs (§Perf):
+worst compute-fraction, most collective-bound, most paper-representative.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(art_dir: str, multipod: bool = False):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        name = os.path.basename(p)
+        if name.endswith("_mp.json") != multipod:
+            continue
+        if "__" not in name:
+            continue
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows):
+    hdr = (f"{'arch':<22} {'shape':<12} {'dom':<10} "
+           f"{'compute_s':>10} {'memory_s':>10} {'floor_s':>9} "
+           f"{'coll_s':>9} {'cf':>5} {'hbm_gb':>7} {'fit':>4} {'6ND/HLO':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        t = r["roofline"]
+        ratio = r.get("model_flops_ratio")
+        lines.append(
+            f"{r['arch']:<22} {r['shape']:<12} {t['dominant']:<10} "
+            f"{t['compute_s']:>10.4f} {t['memory_s']:>10.4f} "
+            f"{t.get('memory_floor_s', 0):>9.4f} "
+            f"{t['collective_s']:>9.4f} {t['compute_fraction']:>5.2f} "
+            f"{r['hbm_per_device_gb']:>7.2f} "
+            f"{'y' if r['fits_hbm'] else 'N':>4} "
+            f"{ratio if ratio else 0:>8.3f}")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(rows):
+    """Three most interesting pairs per the assignment."""
+    if not rows:
+        return {}
+    worst_cf = min(rows, key=lambda r: r["roofline"]["compute_fraction"])
+    most_coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+    # paper-representative: the expert serving step that OCL defers to —
+    # large-batch decode on a large dense model.
+    decode = [r for r in rows if r["shape"] == "decode_32k"]
+    rep = max(decode, key=lambda r: r["flops_per_device"]) if decode \
+        else rows[0]
+    return {
+        "worst_compute_fraction": (worst_cf["arch"], worst_cf["shape"]),
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"]),
+        "paper_representative": (rep["arch"], rep["shape"]),
+    }
+
+
+def fmt_markdown(rows):
+    lines = [
+        "| arch | shape | dominant | compute_s | memory_s (floor) | "
+        "collective_s | compute-frac | HBM GB/dev | fits | 6ND/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["roofline"]
+        ratio = r.get("model_flops_ratio") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['dominant']} "
+            f"| {t['compute_s']:.4f} "
+            f"| {t['memory_s']:.4f} ({t.get('memory_floor_s', 0):.4f}) "
+            f"| {t['collective_s']:.4f} | {t['compute_fraction']:.2f} "
+            f"| {r['hbm_per_device_gb']:.2f} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} | {ratio:.3f} |")
+    return "\n".join(lines)
+
+
+def run(art_dir: str = "artifacts/dryrun", multipod: bool = False,
+        markdown_out: str = None):
+    rows = load(art_dir, multipod)
+    if not rows:
+        print(f"no dry-run artifacts in {art_dir} "
+              f"(multipod={multipod}) — run repro.launch.dryrun first")
+        return {}
+    print(fmt_table(rows))
+    if markdown_out:
+        with open(markdown_out, "w") as f:
+            f.write(fmt_markdown(rows) + "\n")
+    picks = pick_hillclimb(rows)
+    print("\nhillclimb picks:", json.dumps(picks, indent=1))
+    summary = {"n_rows": len(rows), "picks": picks,
+               "dominant_counts": {}}
+    for r in rows:
+        d = r["roofline"]["dominant"]
+        summary["dominant_counts"][d] = \
+            summary["dominant_counts"].get(d, 0) + 1
+    print("dominant terms:", summary["dominant_counts"])
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--markdown-out", default=None)
+    args = ap.parse_args()
+    run(args.dir, args.multipod, args.markdown_out)
+
+
+if __name__ == "__main__":
+    main()

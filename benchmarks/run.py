@@ -1,0 +1,95 @@
+"""Benchmark entrypoint: one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
+Default is a reduced --quick-ish pass sized for the 1-core CPU container;
+``--full`` runs paper-scale streams.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--samples N]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest configuration (CI-sized)")
+    ap.add_argument("--samples", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip", nargs="*", default=[],
+                    help="benchmark names to skip")
+    args = ap.parse_args()
+
+    from benchmarks import (case_analysis, cost_equilibrium,
+                            distribution_shift, prefill_cost, regret,
+                            roofline_report, table1, tradeoff_curves)
+
+    quick = args.quick
+    n = args.samples or (800 if quick else 1000)
+    csv = []
+
+    def record(name, t0, derived):
+        us = (time.time() - t0) * 1e6
+        csv.append(f"{name},{us:.0f},{derived}")
+
+    if "table1" not in args.skip:
+        t0 = time.time()
+        rows = table1.run(samples_per_ds=n, seed=args.seed, quick=quick)
+        acc = np.mean([r["cascade_accuracy"] for r in rows])
+        record("table1", t0, f"mean_cascade_acc={acc:.4f}")
+
+    if "tradeoff" not in args.skip:
+        t0 = time.time()
+        curves = tradeoff_curves.run(samples=max(n // 2, 500),
+                                     seed=args.seed, quick=quick)
+        npts = sum(len(c["points"]) for c in curves)
+        record("tradeoff_curves", t0, f"points={npts}")
+
+    if "case" not in args.skip:
+        t0 = time.time()
+        cases = case_analysis.run(samples=n, seed=args.seed, quick=quick)
+        sv = {c["dataset"]: round(c["cost_savings"], 3) for c in cases}
+        record("case_analysis", t0, f"savings={sv}")
+
+    if "shift" not in args.skip:
+        t0 = time.time()
+        rows = distribution_shift.run(samples=max(n // 2, 500),
+                                      seed=args.seed, quick=quick)
+        d = rows[0]["length_shift_delta"]
+        record("distribution_shift", t0, f"length_delta={d:+.4f}")
+
+    if "regret" not in args.skip:
+        t0 = time.time()
+        rr = regret.run(samples=max(n // 2, 500), seed=args.seed,
+                        quick=quick)
+        record("regret", t0,
+               f"avg_regret={rr['convex_ogd']['final_avg_regret']:.4f}")
+
+    if "equilibrium" not in args.skip:
+        t0 = time.time()
+        cost_equilibrium.run(quick=quick)
+        record("cost_equilibrium", t0, "see artifacts")
+
+    if "prefill" not in args.skip:
+        t0 = time.time()
+        pf = prefill_cost.run(quick=quick)
+        sp = pf["rows"][0]["speedup_vs_paper_baseline"]
+        record("prefill_cost", t0, f"speedup_vs_8xA100={sp:.0f}x")
+
+    if "roofline" not in args.skip:
+        t0 = time.time()
+        rs = roofline_report.run()
+        record("roofline_report", t0,
+               f"rows={rs.get('n_rows', 0)}")
+
+    print("\nname,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figures 3/4: accuracy(/recall) vs cost trade-off curves, produced
+by sweeping the cost weighting factor mu (the paper's budget knob)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import EXPERTS, run_cascade, save_json
+
+MUS = [3e-6, 1e-6, 5e-7, 3e-7, 2e-7, 1e-7, 5e-8]
+
+
+def run(samples: int = 1500, seed: int = 0, quick: bool = False):
+    datasets = ["imdb", "hatespeech", "isear", "fever"]
+    experts = list(EXPERTS)
+    mus = MUS
+    if quick:
+        datasets, experts, mus = ["imdb"], ["gpt-3.5-turbo"], MUS[1:6:2]
+    curves = []
+    for ds in datasets:
+        for expert in experts:
+            pts = []
+            for mu in mus:
+                m = run_cascade(ds, expert, mu, samples=samples, seed=seed)
+                pts.append({
+                    "mu": mu, "expert_calls": m["expert_calls"],
+                    "call_fraction": m["expert_calls"] / samples,
+                    "accuracy": m["accuracy"],
+                    "recall": m.get("recall"),
+                    "f1": m.get("f1"),
+                    "us_per_call": m["us_per_call"],
+                })
+                print(f"{ds}/{expert} mu={mu:g}: "
+                      f"calls={pts[-1]['expert_calls']} "
+                      f"acc={pts[-1]['accuracy']:.3f}", flush=True)
+            curves.append({"dataset": ds, "expert": expert,
+                           "llm_accuracy": m["expert_accuracy"],
+                           "points": pts})
+    save_json("tradeoff_curves.json", curves)
+    return curves
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=1500)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.samples, args.seed, args.quick)
+
+
+if __name__ == "__main__":
+    main()

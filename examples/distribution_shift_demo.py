@@ -1,0 +1,45 @@
+"""Distribution-shift robustness demo (paper §5.4).
+
+Streams IMDB-like data in three orders — default, length-ascending, and
+category-held-out (the Comedy analogue) — and shows the cascade adapting
+online in each case.
+
+  PYTHONPATH=src python examples/distribution_shift_demo.py --samples 1500
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import OnlineCascade, SimulatedExpert, default_cascade_config
+from repro.data import make_stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=1500)
+    ap.add_argument("--mu", type=float, default=3e-7)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    results = {}
+    for order in ("default", "length", "category"):
+        stream = make_stream("imdb", seed=args.seed,
+                             n_samples=args.samples, order=order)
+        expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+        cfg = default_cascade_config(n_classes=2, mu=args.mu,
+                                     seed=args.seed)
+        cascade = OnlineCascade(cfg, expert)
+        m = cascade.run(stream)
+        results[order] = m
+        print(f"{order:>9}: acc={m['accuracy']:.4f} "
+              f"calls={m['expert_calls']}")
+
+    base = results["default"]["accuracy"]
+    for order in ("length", "category"):
+        delta = results[order]["accuracy"] - base
+        print(f"shift '{order}': delta accuracy {delta:+.4f} "
+              f"(paper Table 2: -0.54% / +0.08%)")
+
+
+if __name__ == "__main__":
+    main()

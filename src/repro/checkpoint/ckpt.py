@@ -1,0 +1,109 @@
+"""Pytree checkpointing (npz + json manifest; no orbax offline).
+
+Arrays are gathered to host (sharded arrays are fully addressable on the
+single-process dry-run meshes) and stored flat; the manifest preserves tree
+structure, dtypes, and user metadata (step counters, config name, ...).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(f"#{p.idx}")
+            else:
+                parts.append(str(p))
+        flat[_SEP.join(parts)] = leaf
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Any = None
+
+    def insert(node, parts, value):
+        head = parts[0]
+        is_idx = head.startswith("#")
+        key = int(head[1:]) if is_idx else head
+        if len(parts) == 1:
+            if is_idx:
+                while len(node) <= key:
+                    node.append(None)
+                node[key] = value
+            else:
+                node[key] = value
+            return node
+        nxt_idx = parts[1].startswith("#")
+        if is_idx:
+            while len(node) <= key:
+                node.append(None)
+            if node[key] is None:
+                node[key] = [] if nxt_idx else {}
+            insert(node[key], parts[1:], value)
+        else:
+            if key not in node:
+                node[key] = [] if nxt_idx else {}
+            insert(node[key], parts[1:], value)
+        return node
+
+    for k in sorted(flat.keys()):
+        parts = k.split(_SEP)
+        if root is None:
+            root = [] if parts[0].startswith("#") else {}
+        insert(root, parts, flat[k])
+    return root
+
+
+def save_checkpoint(path: str, tree, metadata: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` (+ metadata) under ``path`` (a directory)."""
+    os.makedirs(path, exist_ok=True)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    manifest = {
+        "keys": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                 for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    # NOTE: np.savez appends '.npz' unless the name already ends with it.
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
+    os.close(fd)
+    # bfloat16 is not a numpy-native dtype; store via uint16 view
+    store = {}
+    for k, v in flat.items():
+        if v.dtype == jax.numpy.bfloat16:
+            store[k] = v.view(np.uint16)
+            manifest["keys"][k]["dtype"] = "bfloat16"
+        else:
+            store[k] = v
+    np.savez(tmp, **store)
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def restore_checkpoint(path: str) -> Tuple[Any, dict]:
+    """Returns (tree, metadata)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {}
+    for k, info in manifest["keys"].items():
+        arr = data[k]
+        if info["dtype"] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        flat[k] = arr
+    return _unflatten(flat), manifest["metadata"]

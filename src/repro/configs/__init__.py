@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ATTN, CROSS, MAMBA,
+    AttnConfig, EncoderConfig, MoEConfig, ModelConfig, SSMConfig,
+    get_config, get_smoke_config, list_architectures, register,
+)
+
+__all__ = [
+    "ATTN", "CROSS", "MAMBA",
+    "AttnConfig", "EncoderConfig", "MoEConfig", "ModelConfig", "SSMConfig",
+    "get_config", "get_smoke_config", "list_architectures", "register",
+]

@@ -1,0 +1,16 @@
+# The paper's primary contribution: online cascade learning (Alg. 1).
+from repro.core.mdp import episode_cost, policy_value
+from repro.core.deferral import (
+    DeferralSpec, deferral_init, deferral_prob)
+from repro.core.cascade import (
+    LevelSpec, CascadeConfig, OnlineCascade, default_cascade_config)
+from repro.core.experts import SimulatedExpert, ModelExpert
+from repro.core.ensemble import OnlineEnsemble
+from repro.core.distill import distill_students
+
+__all__ = [
+    "episode_cost", "policy_value",
+    "DeferralSpec", "deferral_init", "deferral_prob",
+    "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
+    "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",
+]

@@ -1,0 +1,82 @@
+"""Learned deferral functions f_i (paper §3, Confidence Calibration).
+
+Each f_i is a small MLP over the level's predictive distribution.  Inputs
+are permutation-robust features of m_i(x_t): the *sorted* probability
+vector, the max probability, and the normalized entropy.  Output is a
+deferral probability in (0, 1).
+
+Training combines two signals (both via OGD, Eq. 5 + Eq. 1):
+  * calibration MSE:  L(f_i(m_i(x)), z_i),  z_i = 1[argmax m_i(x) != y*]
+    — only on expert-annotated queries (paper: "calibration is only
+    performed on those input queries where the expert LLM is invoked").
+  * MDP cost gradient:  dJ/df_i = p_reach_i * (mu * c_{i+1} - L_i)
+    — pushes the gate open when deferral is cheaper than the expected
+    prediction loss, closed otherwise.
+
+The per-level ``calibration_factor`` (paper App. B.3, Tables 3/4) blends
+the two: grad = cf * grad_MSE + (1 - cf) * grad_J.
+
+The final bias is initialized positive so gates start open ("at startup,
+the policy keeps its gates open, allowing all initial inputs to flow
+through the cascade" — §1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DeferralSpec:
+    n_classes: int
+    hidden: int = 32
+    init_open: float = 2.0       # initial logit -> sigmoid(2.0) ~ 0.88
+
+
+def _features(probs: jax.Array) -> jax.Array:
+    """probs: (..., C) -> permutation-robust features (..., C+2)."""
+    p = jnp.clip(probs, 1e-9, 1.0)
+    sorted_p = jnp.sort(p, axis=-1)[..., ::-1]
+    ent = -jnp.sum(p * jnp.log(p), axis=-1, keepdims=True) \
+        / jnp.log(p.shape[-1])
+    mx = jnp.max(p, axis=-1, keepdims=True)
+    return jnp.concatenate([sorted_p, mx, ent], axis=-1)
+
+
+def deferral_init(key, spec: DeferralSpec):
+    d_in = spec.n_classes + 2
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d_in, spec.hidden)) * (d_in ** -0.5),
+        "b1": jnp.zeros((spec.hidden,)),
+        "w2": jax.random.normal(k2, (spec.hidden, 1)) * (spec.hidden ** -0.5),
+        "b2": jnp.full((1,), spec.init_open),
+    }
+
+
+def deferral_logit(params, probs):
+    h = jnp.tanh(_features(probs) @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+def deferral_prob(params, probs):
+    return jax.nn.sigmoid(deferral_logit(params, probs))
+
+
+def deferral_loss(params, probs, z, reach, mu_cost_minus_loss,
+                  calibration_factor: float):
+    """Combined per-sample objective (batched).
+
+    probs: (B, C); z: (B,) error indicators; reach: (B,) p_reach_i;
+    mu_cost_minus_loss: (B,)  = mu * c_{i+1} - L_i  (fixed, no grad).
+    """
+    f = deferral_prob(params, probs)
+    mse = jnp.mean(jnp.square(f - z))
+    cost = jnp.mean(reach * f * mu_cost_minus_loss)
+    cf = calibration_factor
+    return cf * mse + (1.0 - cf) * cost
+
+
+deferral_grads = jax.grad(deferral_loss)

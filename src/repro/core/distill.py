@@ -1,0 +1,118 @@
+"""Offline knowledge-distillation baseline (§4).
+
+The stream is split 50/50: the first half provides distillation labels (LLM
+annotations, up to the budget N), the second half is the test set.  Students
+are trained offline (epochs over the annotated pool) and evaluated frozen —
+no ensemble, no cascade, no online adaptation.  Mirrors the paper's
+"Distilled LR" / "Distilled BERT" rows.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.features import hash_bow, hash_ids
+from repro.models.students import (
+    LRSpec, TinyTFSpec, lr_init, lr_predict, tinytf_init, tinytf_predict,
+    tinytf_logits)
+from repro.optim import adam
+
+
+def distill_students(stream, expert, budget_n: int,
+                     n_features: int = 2048,
+                     tf_spec: TinyTFSpec = None,
+                     epochs: int = 5, batch: int = 8, lr: float = 1e-3,
+                     seed: int = 0) -> Dict[str, dict]:
+    """Returns {'lr': {...}, 'tinytf': {...}} with test accuracy/recall."""
+    n = len(stream)
+    half = n // 2
+    n_classes = stream.spec.n_classes
+    tf_spec = tf_spec or TinyTFSpec(n_classes=n_classes)
+    from dataclasses import replace
+    tf_spec = replace(tf_spec, n_classes=n_classes)
+
+    rng = np.random.default_rng(seed)
+    train_idx = rng.choice(half, size=min(budget_n, half), replace=False)
+    test_idx = np.arange(half, n)
+
+    y_train = np.array([expert.label(int(i), stream.docs[int(i)])
+                        for i in train_idx], np.int32)
+    y_test = stream.labels[test_idx]
+
+    results = {}
+
+    # ---- logistic regression ----
+    Xtr = np.stack([hash_bow(stream.docs[int(i)], n_features)
+                    for i in train_idx])
+    Xte = np.stack([hash_bow(stream.docs[int(i)], n_features)
+                    for i in test_idx])
+    lrspec = LRSpec(n_features=n_features, n_classes=n_classes)
+    params = lr_init(jax.random.PRNGKey(seed), lrspec)
+    opt = adam(0.05)
+    state = opt.init(params)
+
+    @jax.jit
+    def lr_step(params, state, xb, yb):
+        def loss_fn(p):
+            logits = xb @ p["w"] + p["b"]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+        grads = jax.grad(loss_fn)(params)
+        return opt.step(params, grads, state)
+
+    for _ in range(epochs):
+        order = rng.permutation(len(train_idx))
+        for s in range(0, len(order) - batch + 1, batch):
+            sel = order[s:s + batch]
+            params, state = lr_step(params, state, jnp.asarray(Xtr[sel]),
+                                    jnp.asarray(y_train[sel]))
+    preds = np.asarray(jnp.argmax(lr_predict(params, jnp.asarray(Xte)),
+                                  axis=-1))
+    results["lr"] = _metrics(preds, y_test, n_classes)
+
+    # ---- tiny transformer ----
+    Itr = np.stack([hash_ids(stream.docs[int(i)], tf_spec.vocab,
+                             tf_spec.max_len) for i in train_idx])
+    Ite = np.stack([hash_ids(stream.docs[int(i)], tf_spec.vocab,
+                             tf_spec.max_len) for i in test_idx])
+    params = tinytf_init(jax.random.PRNGKey(seed + 1), tf_spec)
+    opt = adam(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def tf_step(params, state, xb, yb):
+        def loss_fn(p):
+            logits = tinytf_logits(p, xb, tf_spec)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+        grads = jax.grad(loss_fn)(params)
+        return opt.step(params, grads, state)
+
+    for _ in range(epochs):
+        order = rng.permutation(len(train_idx))
+        for s in range(0, len(order) - batch + 1, batch):
+            sel = order[s:s + batch]
+            params, state = tf_step(params, state, jnp.asarray(Itr[sel]),
+                                    jnp.asarray(y_train[sel]))
+    preds = []
+    for s in range(0, len(Ite), 256):
+        p = tinytf_predict(params, jnp.asarray(Ite[s:s + 256]), tf_spec)
+        preds.append(np.asarray(jnp.argmax(p, axis=-1)))
+    preds = np.concatenate(preds)
+    results["tinytf"] = _metrics(preds, y_test, n_classes)
+    results["test_idx"] = test_idx
+    return results
+
+
+def _metrics(preds, labels, n_classes):
+    out = {"accuracy": float(np.mean(preds == labels))}
+    if n_classes == 2:
+        pos = labels == 1
+        tp = float(np.sum((preds == 1) & pos))
+        out["recall"] = tp / max(float(np.sum(pos)), 1.0)
+    return out

@@ -1,0 +1,93 @@
+"""Online ensemble learning — the paper's ablation baseline (§4).
+
+All models run as a linear ensemble with *input-independent* operating
+probabilities w_i (learned online, but no per-input deferral policy).
+Students are continuously updated from LLM annotations, exactly as in the
+cascade; the expert is consulted at a decaying probability (the annotation
+budget knob).  This isolates the value of the learned deferral policy.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import CascadeConfig, _Level
+
+
+class OnlineEnsemble:
+    def __init__(self, config: CascadeConfig, expert,
+                 expert_prob_decay: float = 0.9995,
+                 min_expert_prob: float = 0.0):
+        self.cfg = config
+        self.expert = expert
+        keys = jax.random.split(jax.random.PRNGKey(config.seed),
+                                len(config.levels))
+        self.levels = [_Level(spec, config, k)
+                       for spec, k in zip(config.levels, keys)]
+        self.rng = np.random.default_rng(config.seed + 2)
+        self.theta = np.zeros(len(self.levels), np.float32)
+        self.expert_prob = 1.0
+        self.decay = expert_prob_decay
+        self.min_expert_prob = min_expert_prob
+        self.expert_calls = 0
+        self.total_cost = 0.0
+        self.t = 0
+
+        def theta_grad(theta, probs_stack, y):
+            w = jax.nn.softmax(theta)
+            mix = jnp.einsum("i,ic->c", w, probs_stack)
+            return -jnp.log(jnp.maximum(mix[y], 1e-9))
+
+        self._theta_grad = jax.jit(jax.grad(theta_grad))
+
+    def _budget_left(self, hard_budget: Optional[int]) -> bool:
+        return hard_budget is None or self.expert_calls < hard_budget
+
+    def process(self, idx: int, doc: np.ndarray,
+                hard_budget: Optional[int] = None) -> dict:
+        self.t += 1
+        feats = [lvl.featurize(doc) for lvl in self.levels]
+        probs = np.stack([
+            np.asarray(lvl._predict(lvl.params, jnp.asarray(x)))
+            for lvl, x in zip(self.levels, feats)])
+        w = np.asarray(jax.nn.softmax(jnp.asarray(self.theta)))
+        mix = w @ probs
+        # every ensemble member runs on every input (no deferral)
+        cost = sum(lvl.spec.cost for lvl in self.levels)
+        expert_called = (self.rng.random() < self.expert_prob
+                         and self._budget_left(hard_budget))
+        if expert_called:
+            y = self.expert.label(idx, doc)
+            prediction = y
+            self.expert_calls += 1
+            cost += self.cfg.expert_cost
+            for lvl, x in zip(self.levels, feats):
+                lvl.cache_add(x, y)
+                lvl.student_update(self.rng)
+            g = np.asarray(self._theta_grad(
+                jnp.asarray(self.theta), jnp.asarray(probs), y))
+            eta = 0.5 / np.sqrt(self.t)
+            self.theta = self.theta - eta * g
+        else:
+            prediction = int(np.argmax(mix))
+        self.expert_prob = max(self.expert_prob * self.decay,
+                               self.min_expert_prob)
+        self.total_cost += cost
+        return {"prediction": prediction, "expert_called": expert_called}
+
+    def run(self, stream, hard_budget: Optional[int] = None) -> dict:
+        preds = np.zeros(len(stream), np.int32)
+        for i, doc in enumerate(stream.docs):
+            preds[i] = self.process(i, doc, hard_budget)["prediction"]
+        labels = stream.labels
+        acc = float(np.mean(preds == labels))
+        out = {"accuracy": acc, "expert_calls": self.expert_calls,
+               "total_cost_units": self.total_cost, "predictions": preds}
+        if stream.spec.n_classes == 2:
+            pos = labels == 1
+            tp = float(np.sum((preds == 1) & pos))
+            out["recall"] = tp / max(float(np.sum(pos)), 1.0)
+        return out

@@ -1,0 +1,90 @@
+"""Expert models m_N for the cascade.
+
+* ``SimulatedExpert`` — the default for paper-reproduction runs: returns the
+  stream's precomputed expert annotations (ground truth corrupted at the
+  paper's per-dataset LLM accuracy, length-biased; data.streams).  Zero
+  compute, exact control of the noisy-teacher regime.
+* ``ModelExpert`` — a real in-repo model: a transformer classifier trained
+  offline on ground truth to stand in for a zero-shot LLM.  Used by the
+  end-to-end example so the full pipeline (featurize -> students -> deferral
+  -> expert forward -> online updates) exercises real compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.features import hash_ids
+from repro.data.streams import Stream
+from repro.models.students import (
+    TinyTFSpec, tinytf_init, tinytf_loss, tinytf_predict)
+from repro.optim import adam
+
+
+class SimulatedExpert:
+    def __init__(self, stream: Stream, name: str = "gpt-3.5-turbo",
+                 cost: float = 1.0e6):
+        self.name = name
+        self.cost = cost
+        self._labels = stream.expert_labels(name)
+
+    def label(self, idx: int, doc: np.ndarray) -> int:
+        return int(self._labels[idx])
+
+
+@dataclass
+class ModelExpert:
+    """A trained transformer classifier acting as the LLM expert."""
+    params: dict
+    spec: TinyTFSpec
+    name: str = "model-expert"
+    cost: float = 1.0e6
+
+    def __post_init__(self):
+        spec = self.spec
+        self._predict = jax.jit(
+            lambda p, ids: tinytf_predict(p, ids, spec))
+
+    def label(self, idx: int, doc: np.ndarray) -> int:
+        ids = hash_ids(doc, self.spec.vocab, self.spec.max_len)[None]
+        probs = self._predict(self.params, jnp.asarray(ids))
+        return int(jnp.argmax(probs[0]))
+
+
+def train_model_expert(stream: Stream, n_classes: int,
+                       d_model: int = 256, n_layers: int = 4,
+                       epochs: int = 3, batch: int = 32,
+                       lr: float = 1e-3, seed: int = 0,
+                       max_samples: Optional[int] = None,
+                       cost: float = 1.0e6) -> ModelExpert:
+    """Train the stand-in LLM on ground truth (offline, before serving)."""
+    spec = TinyTFSpec(d_model=d_model, n_layers=n_layers, d_ff=4 * d_model,
+                      n_classes=n_classes)
+    params = tinytf_init(jax.random.PRNGKey(seed), spec)
+    opt = adam(lr)
+    state = opt.init(params)
+    n = len(stream) if max_samples is None else min(max_samples, len(stream))
+    ids = np.stack([hash_ids(stream.docs[i], spec.vocab, spec.max_len)
+                    for i in range(n)])
+    labels = stream.labels[:n]
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: tinytf_loss(p, xb, yb, spec))(params)
+        params, state = opt.step(params, grads, state)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - batch + 1, batch):
+            sel = order[s:s + batch]
+            params, state, _ = step(params, state,
+                                    jnp.asarray(ids[sel]),
+                                    jnp.asarray(labels[sel]))
+    return ModelExpert(params=params, spec=spec, cost=cost)

@@ -1,0 +1,42 @@
+"""The paper's episodic MDP (§2): states <x_t, i>, actions Y + defer.
+
+``episode_cost`` evaluates Eq. (1)'s inner sum for one episode given the
+per-level deferral probabilities and prediction losses:
+
+  J_t(pi) = sum_i p_pi^{s_{t,i}} * C_pi(s_{t,i})
+  C_pi(s_i) = f_i * mu * c_{i+1} + (1 - f_i) * L(pred_i | y_t)
+
+with p_pi^{s_i} = prod_{j<i} f_j (probability of reaching level i).
+The final level (the expert) never defers: f_N = 0 by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def episode_cost(defer_probs: jax.Array, pred_losses: jax.Array,
+                 defer_costs: jax.Array, mu: float) -> jax.Array:
+    """Eq. (1) inner term for one episode.
+
+    defer_probs: (N,) with defer_probs[-1] == 0 (expert outputs).
+    pred_losses: (N,) prediction loss L(a_i | y_t) at each level.
+    defer_costs: (N,) penalty c_{i+1} paid when deferring *from* level i
+                 (last entry unused).
+    """
+    n = defer_probs.shape[0]
+    reach = jnp.concatenate(
+        [jnp.ones((1,), defer_probs.dtype),
+         jnp.cumprod(defer_probs[:-1])])
+    immediate = defer_probs * mu * defer_costs \
+        + (1.0 - defer_probs) * pred_losses
+    return jnp.sum(reach * immediate), reach
+
+
+def policy_value(defer_probs_seq: jax.Array, pred_losses_seq: jax.Array,
+                 defer_costs: jax.Array, mu: float) -> jax.Array:
+    """J(pi, T): Eq. (1) summed over T episodes (batched episode_cost)."""
+    costs, _ = jax.vmap(
+        lambda f, l: episode_cost(f, l, defer_costs, mu))(
+            defer_probs_seq, pred_losses_seq)
+    return jnp.sum(costs)

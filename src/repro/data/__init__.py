@@ -1,0 +1,7 @@
+from repro.data.streams import (
+    StreamSpec, Stream, BENCHMARKS, make_stream, benchmark_spec,
+)
+from repro.data.features import hash_bow, hash_ids
+
+__all__ = ["StreamSpec", "Stream", "BENCHMARKS", "make_stream",
+           "benchmark_spec", "hash_bow", "hash_ids"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the serving hot spots (DESIGN.md §4).
+
+The paper's cost center is LLM first-token inference (App. B.1: quadratic
+attention prefill dominates, OOMs at batch 2 on 8xA100).  These kernels are
+the TPU-native answer for the expert level of the cascade:
+
+  flash_attention/  — prefill attention, causal + sliding-window + GQA
+  decode_attention/ — single-token GQA attention over a (ring) KV cache
+  moe_gmm/          — grouped expert matmul for MoE FFNs
+  ssd_scan/         — Mamba2 chunked state-space-dual scan
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (auto interpret=True off-TPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

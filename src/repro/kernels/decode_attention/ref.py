@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, sm_scale=None) -> jax.Array:
+    """q: (B, K, G, hd); k, v: (B, W, K, hd); pos: (B, W) with -1 = empty."""
+    hd = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    s = jnp.einsum("bkgd,bwkd->bkgw", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    valid = (pos >= 0)[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

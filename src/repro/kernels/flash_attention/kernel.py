@@ -1,0 +1,129 @@
+"""Flash-attention prefill kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Schedule: grid (batch, q_heads, q_blocks, kv_blocks), kv innermost so the
+online-softmax running state (m, l, acc) lives in VMEM scratch across kv
+iterations.  GQA is expressed in the K/V index_maps (q head h reads kv head
+h // group_size); causal and sliding-window masks are built from block
+offsets with iota; fully-masked kv blocks are skipped with pl.when (on TPU
+the MXU never sees them).
+
+Tile sizes default to (block_q=512, block_kv=512) x head_dim — with fp32
+scratch that is ~2.5 MB of VMEM at head_dim 128, comfortably under the
+~16 MB/core budget while keeping the matmul dims MXU-aligned (>=128).
+Head dims that are not multiples of 128 (h2o-danube's 120) are zero-padded
+by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_kv: int, causal: bool,
+                  window: Optional[int], n_kv_blocks: int, sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Block-level skip: with causal masking, kv blocks strictly above the
+    # diagonal contribute nothing; with a window, kv blocks entirely left of
+    # the band contribute nothing.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run,
+                              k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bkv)
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         block_q: int = 512, block_kv: int = 512,
+                         sm_scale: Optional[float] = None,
+                         interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, K, Skv, hd); H % K == 0.
+
+    Returns (B, H, Sq, hd).  hd should be a multiple of 8 (the wrapper pads
+    to 128 on real TPU).
+    """
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    group = H // K
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    n_q = Sq // block_q
+    n_kv = Skv // block_kv
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, causal=causal,
+        window=window, n_kv_blocks=n_kv, sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, hd), pads non-MXU-aligned head dims
+(h2o-danube's 120 -> 128), and picks interpret mode automatically when not
+running on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) -> (B, Sq, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    hd = q.shape[-1]
+    pad = (-hd) % 128 if not interpret else 0
+    sm_scale = hd ** -0.5
+    if pad:
+        zq = [(0, 0)] * 3 + [(0, pad)]
+        q = jnp.pad(q, zq)
+        k = jnp.pad(k, zq)
+        v = jnp.pad(v, zq)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               sm_scale=sm_scale, interpret=interpret)
+    out = out.transpose(0, 2, 1, 3)
+    if pad:
+        out = out[..., :hd]
+    return out

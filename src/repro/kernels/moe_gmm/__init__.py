@@ -1,0 +1,3 @@
+from repro.kernels.moe_gmm.ops import moe_gmm, moe_expert_ffn
+
+__all__ = ["moe_gmm", "moe_expert_ffn"]

@@ -1,0 +1,64 @@
+"""Grouped expert matmul: (E, C, D) x (E, D, F) -> (E, C, F).
+
+This is the MoE FFN hot loop after capacity dispatch (GShard-style, see
+models/moe.py).  On GPU this is usually a scatter into per-expert buffers +
+cuBLAS grouped GEMM; the TPU-native form is a 4-D sequential grid
+(expert, c_block, f_block, d_block) with an fp32 VMEM accumulator carried
+across the contraction (d) blocks — each (c x d) x (d x f) tile is a single
+MXU issue, no gather/scatter (DESIGN.md §4).
+
+VMEM per step: bc*bd + bd*bf + bc*bf fp32 ~= 3 * 256KB at 256x512 tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d_blocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)      # (bd, bf)
+    acc_scr[...] += x @ w
+
+    @pl.when(di == n_d_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def gmm(x, w, *, block_c: int = 256, block_f: int = 512, block_d: int = 512,
+        interpret: bool = True) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    n_d = D // block_d
+
+    kernel = functools.partial(_gmm_kernel, n_d_blocks=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // block_c, F // block_f, n_d),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

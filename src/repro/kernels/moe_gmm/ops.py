@@ -1,0 +1,37 @@
+"""Public jit'd wrappers: grouped matmul + fused expert SwiGLU FFN."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import gmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x, w, *, block_c: int = 256, block_f: int = 512,
+            block_d: int = 512, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_expert_ffn(x, w_in, w_gate, w_out,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Capacity-bucketed expert FFN: three grouped matmuls + SwiGLU."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    h = moe_gmm(x, w_in, interpret=interpret)
+    g = moe_gmm(x, w_gate, interpret=interpret)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * h.astype(jnp.float32)
+         ).astype(x.dtype)
+    return moe_gmm(h, w_out, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the grouped matmul + full expert FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def expert_ffn_ref(x, w_in, w_gate, w_out) -> jax.Array:
+    """SwiGLU expert FFN: (E, C, D) -> (E, C, D)."""
+    h = gmm_ref(x, w_in)
+    g = gmm_ref(x, w_gate)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * h.astype(jnp.float32)
+         ).astype(x.dtype)
+    return gmm_ref(h, w_out)

@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunked scan kernel (state-space duality, arXiv:2405.21060).
+
+TPU-native schedule (DESIGN.md §4): the sequence is split into chunks of
+length L; all *intra-chunk* work is dense (L x L) and (L x d_state)
+matmuls that feed the MXU, and the *inter-chunk* recurrence carries a
+(head_dim x d_state) state in VMEM scratch across the sequential chunk
+grid dimension — the TPU analogue of the CUDA selective-scan, with the
+parallel-scan replaced by the grid's guaranteed sequential order.
+
+Grid: (batch, heads, n_chunks).  Per-step VMEM: chunk inputs
+(L x head_dim + 2 L x d_state + 2 L) + state (head_dim x d_state) fp32
+~ 0.5 MB at L=256, hp=64, N=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, adt_ref, dt_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)     # (L, hp)
+    adt = adt_ref[0, 0, 0].astype(jnp.float32)  # (L,)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)   # (L,)
+    B = b_ref[0, 0].astype(jnp.float32)        # (L, N)
+    C = c_ref[0, 0].astype(jnp.float32)        # (L, N)
+
+    cum = jnp.cumsum(adt)                      # (L,)
+    # intra-chunk: scores[i, j] = (C_i . B_j) * exp(cum_i - cum_j) * (i >= j)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(li >= lj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = C @ B.T                               # (L, L)
+    y_intra = (cb * decay) @ (x * dt[:, None])
+
+    # inter-chunk: y_i += (C_i * exp(cum_i)) @ h_prev^T
+    h_prev = h_scr[...]                        # (hp, N)
+    y_inter = (C * jnp.exp(cum)[:, None]) @ h_prev.T
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h = h * exp(cum_L) + sum_j exp(cum_L - cum_j) dt_j x_j B_j^T
+    decay_out = jnp.exp(cum[-1] - cum)         # (L,)
+    xw = x * (decay_out * dt)[:, None]         # (L, hp)
+    h_scr[...] = h_prev * jnp.exp(cum[-1]) + xw.T @ B
+
+
+def ssd_scan_chunked(x, adt, dt, B, C, *, chunk: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """x: (Bsz, S, H, hp); adt, dt: (Bsz, S, H); B, C: (Bsz, S, N).
+
+    Returns y: (Bsz, S, H, hp).  n_groups = 1 (B/C shared across heads).
+    """
+    Bsz, S, H, hp = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # kernel layouts: x (Bsz, H, nc, L, hp); adt/dt (Bsz, H, nc, L);
+    # B/C (Bsz, nc, L, N)
+    xk = x.reshape(Bsz, nc, chunk, H, hp).transpose(0, 3, 1, 2, 4)
+    adtk = adt.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2)
+    dtk = dt.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2)
+    Bk = B.reshape(Bsz, nc, chunk, N)
+    Ck = C.reshape(Bsz, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    yk = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, hp),
+                         lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, hp),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, chunk, hp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hp, N), jnp.float32)],
+        interpret=interpret,
+    )(xk, adtk, dtk, Bk, Ck)
+    return yk.transpose(0, 2, 3, 1, 4).reshape(Bsz, S, H, hp)

@@ -1,0 +1,23 @@
+"""Public jit'd wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, adt, dt, B, C, *, chunk: int = 256,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba2 SSD: x (Bsz,S,H,hp); adt/dt (Bsz,S,H); B/C (Bsz,S,N)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_scan_chunked(x, adt, dt, B, C, chunk=chunk,
+                            interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: sequential (per-token) SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, adt, dt, B, C) -> jax.Array:
+    """Sequential recurrence, the ground-truth semantics:
+
+    h_t = h_{t-1} * exp(adt_t) + dt_t * B_t (x) x_t
+    y_t = C_t . h_t
+
+    x: (Bsz, S, H, hp); adt, dt: (Bsz, S, H); B, C: (Bsz, S, N).
+    """
+    Bsz, S, H, hp = x.shape
+    N = B.shape[-1]
+
+    def step(h, inputs):
+        xt, adt_t, dt_t, Bt, Ct = inputs
+        dA = jnp.exp(adt_t)                       # (Bsz, H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, Bt, xt)
+        h = h * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, hp, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          adt.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,477 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+For each combination this proves, without hardware:
+  * the sharding config is coherent (lower succeeds),
+  * the collective schedule is partitionable (compile succeeds),
+  * the memory fits (memory_analysis printed / recorded),
+and extracts the roofline inputs (cost_analysis FLOPs/bytes + HLO
+collective bytes) into a JSON artifact consumed by benchmarks/roofline.
+
+Cost extrapolation: XLA's HloCostAnalysis counts a while-loop body once
+regardless of trip count, so FLOPs/bytes/collectives of scanned stacks are
+measured by small straight-line probes (inner scans unrolled via
+flags.UNROLL_FOR_COST_ANALYSIS) at (periods P, batch B) in {1,2} x
+{dp, 2dp} and extended along the exact bilinear law
+cost(P, B) = a0 + a1*P + (c0 + c1*P)*B.  memory_analysis and the
+compile-success proof always come from the FULL-depth model.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k
+  python -m repro.launch.dryrun --all                  # 40 pairs, 16x16
+  python -m repro.launch.dryrun --all --multipod       # 40 pairs, 2x16x16
+Options for perf experiments (EXPERIMENTS.md SPerf):
+  --moe-mode expert|tensor   --zero   --opt-dtype bfloat16   --no-remat
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_architectures
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import INPUT_SHAPES, input_specs, resolve_config
+from repro.metrics.roofline import (
+    V5E, model_flops_6nd, parse_collective_bytes, roofline_terms)
+from repro.models import transformer as tf_model
+from repro.optim import adamw
+from repro import sharding as shd
+from repro.sharding import param_pspecs
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec builders
+# ---------------------------------------------------------------------------
+def _div(n, mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0 and n >= size
+
+
+def batch_pspecs(batch_struct, mesh):
+    baxes = shd.batch_axes(mesh)
+
+    def one(leaf):
+        dims = [None] * len(leaf.shape)
+        if baxes and _div(leaf.shape[0], mesh, baxes):
+            dims[0] = baxes if len(baxes) > 1 else baxes[0]
+        elif len(leaf.shape) >= 2 and baxes and _div(leaf.shape[1], mesh,
+                                                     baxes):
+            dims[1] = baxes if len(baxes) > 1 else baxes[0]
+        return P(*dims)
+
+    return jax.tree.map(one, batch_struct)
+
+
+def cache_pspecs(cache_struct, mesh):
+    """KV/SSM cache shardings: batch over (pod,data) when divisible, else
+    the cache length dim; kv-heads / ssm-heads / conv channels over model
+    when divisible, else sequence-parallel cache over model."""
+    baxes = shd.batch_axes(mesh)
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shape = leaf.shape
+        dims = [None] * len(shape)
+        if name in ("k", "v", "xk", "xv"):
+            # (Pd, B, W, K, hd)
+            if baxes and _div(shape[1], mesh, baxes):
+                dims[1] = baxes if len(baxes) > 1 else baxes[0]
+            elif baxes and _div(shape[2], mesh, baxes):
+                dims[2] = baxes if len(baxes) > 1 else baxes[0]
+            if _div(shape[3], mesh, ("model",)):
+                dims[3] = "model"
+            elif dims[2] is None and _div(shape[2], mesh, ("model",)):
+                dims[2] = "model"
+        elif name == "ssm":
+            # (Pd, B, H, hp, N)
+            if baxes and _div(shape[1], mesh, baxes):
+                dims[1] = baxes if len(baxes) > 1 else baxes[0]
+            if _div(shape[2], mesh, ("model",)):
+                dims[2] = "model"
+        elif name == "conv":
+            # (Pd, B, d_conv-1, d_xbc)
+            if baxes and _div(shape[1], mesh, baxes):
+                dims[1] = baxes if len(baxes) > 1 else baxes[0]
+            if _div(shape[3], mesh, ("model",)):
+                dims[3] = "model"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def zero_shard_specs(specs, struct, mesh):
+    """ZeRO-style optimizer-state sharding: add the data axis to the first
+    unsharded, divisible dim of each moment tensor."""
+    baxes = shd.batch_axes(mesh)
+    if not baxes:
+        return specs
+
+    def one(spec, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (d, s) in enumerate(zip(leaf.shape, dims)):
+            if s is None and _div(d, mesh, baxes):
+                dims[i] = baxes if len(baxes) > 1 else baxes[0]
+                break
+        return P(*dims)
+
+    return jax.tree.map(one, specs, struct,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg, opt, remat: bool = True, unroll: bool = False,
+                    loss_chunk: int = 0):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = tf_model.train_loss(p, batch, cfg, remat=remat,
+                                                unroll=unroll,
+                                                loss_chunk=loss_chunk)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = opt.step(params, grads, opt_state)
+        return loss, params, opt_state
+    return train_step
+
+
+def make_prefill_step(cfg, cache_len: Optional[int] = None,
+                      unroll: bool = False):
+    def prefill_step(params, batch):
+        return tf_model.prefill(params, batch, cfg, cache_len=cache_len,
+                                unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg, unroll: bool = False):
+    def decode_step(params, cache, tokens, pos):
+        return tf_model.decode_step(params, cache, tokens, pos, cfg,
+                                    unroll=unroll)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Core
+# ---------------------------------------------------------------------------
+def _with_periods(cfg, n_periods: int):
+    new = dataclasses.replace(cfg, n_layers=len(cfg.period) * n_periods)
+    if cfg.encoder is not None:
+        new = dataclasses.replace(
+            new, encoder=dataclasses.replace(cfg.encoder,
+                                             n_layers=n_periods))
+    return new
+
+
+def _compile_combo(cfg, shape, mesh, *, zero, opt_dtype, remat,
+                   unroll=False, seq_parallel=False, loss_chunk=0,
+                   shard_params_data=False):
+    """Lower + compile one (cfg, shape) on mesh.  Returns (compiled, secs)."""
+    from repro.models import flags
+    flags.set_unroll(unroll)
+    shd.specs.set_seq_parallel(seq_parallel)
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(
+        functools.partial(tf_model.init_params, cfg=cfg), key)
+    pspecs = param_pspecs(params_struct,
+                          moe_mode=cfg.moe.sharding_mode if cfg.moe else
+                          "tensor")
+    if shard_params_data:
+        # Serving-only (beyond-paper): no optimizer binds weights to data
+        # ranks, so spread every tensor's first free divisible dim over
+        # (pod, data) as well -> weights occupy total/|mesh| per chip and
+        # are all-gathered on use.
+        pspecs = zero_shard_specs(pspecs, params_struct, mesh)
+    params_ns = shd.tree_named_shardings(mesh, pspecs)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = adamw(3e-4, state_dtype=opt_dtype)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        opt_specs = {"count": P()}
+        for mom in ("m", "v"):
+            opt_specs[mom] = pspecs
+            if zero:
+                opt_specs[mom] = zero_shard_specs(
+                    opt_specs[mom], params_struct, mesh)
+        opt_ns = shd.tree_named_shardings(mesh, opt_specs)
+        batch_ns = shd.tree_named_shardings(
+            mesh, batch_pspecs(specs["batch"], mesh))
+        step = make_train_step(cfg, opt, remat=remat, unroll=unroll,
+                               loss_chunk=loss_chunk)
+        jitted = jax.jit(step, in_shardings=(params_ns, opt_ns, batch_ns),
+                         donate_argnums=(0, 1))
+        args = (params_struct, opt_struct, specs["batch"])
+    elif shape.kind == "prefill":
+        batch_ns = shd.tree_named_shardings(
+            mesh, batch_pspecs(specs["batch"], mesh))
+        step = make_prefill_step(cfg, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(params_ns, batch_ns))
+        args = (params_struct, specs["batch"])
+    else:  # decode
+        cache_ns = shd.tree_named_shardings(
+            mesh, cache_pspecs(specs["cache"], mesh))
+        tok_ns = NamedSharding(mesh, P(None, None))
+        pos_ns = NamedSharding(mesh, P())
+        step = make_decode_step(cfg, unroll=unroll)
+        jitted = jax.jit(step,
+                         in_shardings=(params_ns, cache_ns, tok_ns, pos_ns),
+                         donate_argnums=(1,))
+        args = (params_struct, specs["cache"], specs["tokens"],
+                specs["pos"])
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    flags.set_unroll(False)
+    shd.specs.set_seq_parallel(False)
+    return compiled, t_lower, t_compile
+
+
+def _extract_cost(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(compiled.as_text())
+    return np.array([flops, nbytes, float(coll["total"])]), coll
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               moe_mode: Optional[str] = None, zero: bool = False,
+               opt_dtype: str = "float32", remat: bool = True,
+               seq_parallel: bool = False, loss_chunk: int = 0,
+               shard_params_data: bool = False,
+               extrapolate: bool = True, hw=V5E,
+               verbose: bool = True) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if moe_mode and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, sharding_mode=moe_mode))
+    cfg = resolve_config(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    shd.set_mesh(mesh)
+    opts = dict(zero=zero, opt_dtype=opt_dtype, remat=remat,
+                seq_parallel=seq_parallel, loss_chunk=loss_chunk,
+                shard_params_data=shard_params_data)
+
+    # full-depth compile: proves lower/compile + memory analysis
+    compiled, t_lower, t_compile = _compile_combo(cfg, shape, mesh, **opts)
+    mem = compiled.memory_analysis()
+    cost_full, coll_full = _extract_cost(compiled)
+
+    # Cost extrapolation.  XLA counts while-loop bodies once, so the cost
+    # probes (a) straighten every inner scan (flags.UNROLL_FOR_COST_ANALYSIS)
+    # and (b) run at reduced depth/batch, then extend along the exact
+    # bilinear law cost(P, B) = a0 + a1*P + (c0 + c1*P)*B:
+    #   per-token work  ~ c-terms (attention, FFN, activation collectives),
+    #   per-param work  ~ a-terms (optimizer, gradient all-reduce).
+    n_periods = cfg.n_periods
+    dp = int(np.prod([mesh.shape[a] for a in shd.batch_axes(mesh)]))
+    b_full = shape.batch
+    can_vary_b = b_full >= 2 * dp and b_full % dp == 0
+
+    def _probe(p, b):
+        sh = dataclasses.replace(shape, batch=b)
+        return _extract_cost(_compile_combo(_with_periods(cfg, p), sh,
+                                            mesh, unroll=True, **opts)[0])
+
+    if extrapolate and n_periods > 2 and can_vary_b:
+        b1, b2 = dp, 2 * dp
+        f11, k11 = _probe(1, b1)
+        f21, k21 = _probe(2, b1)
+        f12, k12 = _probe(1, b2)
+        f22, k22 = _probe(2, b2)
+
+        def bilinear(v11, v21, v12, v22):
+            s1 = (v12 - v11) / (b2 - b1)          # c0 + c1
+            s2 = (v22 - v21) / (b2 - b1)          # c0 + 2 c1
+            c1 = s2 - s1
+            c0 = 2 * s1 - s2
+            a1 = (v21 - v11) - c1 * b1
+            a0 = v11 - a1 - (c0 + c1) * b1
+            return (a0 + a1 * n_periods
+                    + (c0 + c1 * n_periods) * b_full)
+
+        cost_vec = bilinear(f11, f21, f12, f22)
+        coll = {}
+        for key_ in coll_full:
+            if key_ == "count":
+                continue
+            coll[key_] = int(max(bilinear(
+                k11.get(key_, 0), k21.get(key_, 0),
+                k12.get(key_, 0), k22.get(key_, 0)), 0))
+        coll["total"] = sum(coll[c] for c in coll if c != "count")
+        coll["count"] = coll_full["count"]
+        extrapolated = "bilinear(P,B)"
+    elif extrapolate and n_periods > 2:
+        c1v, coll1 = _probe(1, b_full)
+        c2v, coll2 = _probe(2, b_full)
+        cost_vec = c1v + (n_periods - 1) * (c2v - c1v)
+        coll = {k: int(max(coll1.get(k, 0)
+                           + (n_periods - 1) * (coll2.get(k, 0)
+                                                - coll1.get(k, 0)), 0))
+                for k in coll_full if k != "count"}
+        coll["total"] = sum(coll[c] for c in coll if c != "count")
+        coll["count"] = coll_full["count"]
+        extrapolated = "linear(P)"
+    else:
+        cost_vec, coll = cost_full, coll_full
+        extrapolated = False
+
+    flops_dev, bytes_dev, coll_dev = [float(x) for x in cost_vec]
+    terms = roofline_terms(flops_dev, bytes_dev, coll_dev, hw)
+
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+    args_b = mem_fields.get("argument_size_in_bytes") or 0
+    temp_b = mem_fields.get("temp_size_in_bytes") or 0
+    out_b = mem_fields.get("output_size_in_bytes") or 0
+    alias_b = mem_fields.get("alias_size_in_bytes") or 0
+    per_dev_hbm = args_b + temp_b
+    # 'bytes accessed' counts every op's operands+results (VMEM reuse and
+    # XLA-CPU bf16 emulation inflate it).  The floor is what must cross HBM
+    # at least once: live arguments + (non-aliased) outputs.
+    bytes_floor = args_b + max(out_b - alias_b, 0)
+    terms["memory_floor_s"] = bytes_floor / hw.hbm_bw
+
+    if shape.kind == "train":
+        n_tokens = shape.batch * shape.seq
+        model_flops = model_flops_6nd(cfg, n_tokens)
+    elif shape.kind == "prefill":
+        model_flops = model_flops_6nd(cfg, shape.batch * shape.seq) / 3.0
+    else:
+        model_flops = model_flops_6nd(cfg, shape.batch) / 3.0
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "roofline": terms,
+        "model_flops": model_flops,
+        "hlo_flops_global": flops_dev * n_dev,
+        "model_flops_ratio": (model_flops / (flops_dev * n_dev)
+                              if flops_dev else None),
+        "memory": mem_fields,
+        "bytes_floor_per_device": bytes_floor,
+        "hbm_per_device_gb": per_dev_hbm / 1e9,
+        "fits_hbm": bool(per_dev_hbm <= hw.hbm_bytes),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "extrapolated": extrapolated,
+        "options": {"moe_mode": moe_mode, "zero": zero,
+                    "opt_dtype": opt_dtype, "remat": remat,
+                    "seq_parallel": seq_parallel, "loss_chunk": loss_chunk,
+                    "shard_params_data": shard_params_data},
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {result['mesh']} "
+              f"({n_dev} devices) ==")
+        print(f"memory_analysis: {mem}")
+        print(f"cost_analysis (extrapolated={extrapolated}): "
+              f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e}")
+        print(f"collectives/dev: {coll}")
+        print(f"roofline: compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"(floor {terms['memory_floor_s']:.4f}s) "
+              f"collective={terms['collective_s']:.4f}s "
+              f"dominant={terms['dominant']}")
+        print(f"hbm/dev={result['hbm_per_device_gb']:.2f} GB "
+              f"fits={result['fits_hbm']}  "
+              f"model_flops_ratio={result['model_flops_ratio']:.3f}"
+              if result['model_flops_ratio'] else "")
+        print(f"lower={t_lower:.1f}s compile={t_compile:.1f}s", flush=True)
+    shd.set_mesh(None)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--moe-mode", type=str, default=None,
+                    choices=["tensor", "expert"])
+    ap.add_argument("--zero", action="store_true")
+    ap.add_argument("--opt-dtype", type=str, default="float32")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for arch in list_architectures():
+            for shape in INPUT_SHAPES:
+                combos.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        tag = args.tag + ("_mp" if args.multipod else "")
+        fname = os.path.join(args.out, f"{arch}__{shape}{tag}.json")
+        if args.skip_existing and os.path.exists(fname):
+            print(f"skip existing {fname}")
+            continue
+        try:
+            res = dryrun_one(arch, shape, multi_pod=args.multipod,
+                             moe_mode=args.moe_mode, zero=args.zero,
+                             opt_dtype=args.opt_dtype,
+                             remat=not args.no_remat,
+                             seq_parallel=args.seq_parallel,
+                             loss_chunk=args.loss_chunk,
+                             extrapolate=not args.no_extrapolate)
+            with open(fname, "w") as f:
+                json.dump(res, f, indent=1)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((arch, shape, repr(e)[:500]))
+            print(f"FAILED {arch} x {shape}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nAll {len(combos)} dry-runs succeeded.")
+
+
+if __name__ == "__main__":
+    main()

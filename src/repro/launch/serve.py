@@ -1,0 +1,169 @@
+"""Streaming cascade server — the paper's deployment shape (serving kind).
+
+Processes a query stream in micro-batches:
+  1. every query runs through the cascade students + deferral MLPs,
+  2. deferred queries are batched into ONE expert forward (batched
+     requests — the serving pattern App. B.1 could not reach on GPUs),
+  3. expert annotations feed the online updates (Algorithm 1), in stream
+     order.
+
+Per-sample updates within a micro-batch are applied in arrival order, so
+with --microbatch 1 this is exactly Algorithm 1; larger micro-batches trade
+a bounded annotation delay for expert-batch throughput (documented
+deviation, EXPERIMENTS.md §Paper/Serving).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --dataset hatespeech \
+      --samples 2000 --mu 3e-7 --microbatch 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OnlineCascade, SimulatedExpert, default_cascade_config
+from repro.core.experts import ModelExpert, train_model_expert
+from repro.data import make_stream
+from repro.data.features import hash_ids
+from repro.models.students import tinytf_predict
+
+
+class BatchedModelExpert(ModelExpert):
+    """ModelExpert with a batched label path for the serving loop."""
+
+    def label_batch(self, docs) -> np.ndarray:
+        if not docs:
+            return np.zeros((0,), np.int32)
+        ids = np.stack([hash_ids(d, self.spec.vocab, self.spec.max_len)
+                        for d in docs])
+        probs = self._predict(self.params, jnp.asarray(ids))
+        return np.asarray(jnp.argmax(probs, axis=-1), np.int32)
+
+
+class _BatchProxy:
+    """Expert proxy serving precomputed labels to the cascade during the
+    replay pass of a micro-batch; falls back to a single expert call when
+    the routing probe mispredicted (rare: post-update gate flips)."""
+
+    def __init__(self, expert):
+        self.expert = expert
+        self.cost = expert.cost
+        self.table = {}
+        self.fallback_calls = 0
+
+    def label(self, idx: int, doc) -> int:
+        if idx in self.table:
+            return int(self.table[idx])
+        self.fallback_calls += 1
+        return int(self.expert.label(idx, doc))
+
+
+def probe_route(cascade: OnlineCascade, idx: int, doc, rng) -> bool:
+    """Predict whether ``process(idx, doc)`` would consult the expert,
+    WITHOUT mutating cascade state.  Mirrors the level loop's rng draws
+    using a cloned generator so jump decisions line up with the replay."""
+    import jax.numpy as jnp
+    for i, lvl in enumerate(cascade.levels):
+        if (not cascade._budget_exhausted() and rng.random() < lvl.beta):
+            return True                      # DAgger jump
+        x = lvl.featurize(doc)
+        probs, dprob = lvl._predict_and_defer(
+            lvl.params, lvl.dparams, jnp.asarray(x))
+        defer = float(dprob) > 0.5
+        if cascade._budget_exhausted() and i == len(cascade.levels) - 1:
+            defer = False
+        if not defer:
+            return False
+    return True
+
+
+def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
+                 expert_kind: str = "model", seed: int = 0,
+                 log_every: int = 500):
+    stream = make_stream(dataset, seed=seed, n_samples=samples)
+    n_classes = stream.spec.n_classes
+
+    if expert_kind == "model":
+        print("training stand-in LLM expert ...", flush=True)
+        base = train_model_expert(stream, n_classes, epochs=2,
+                                  max_samples=min(4000, samples), seed=seed)
+        expert = BatchedModelExpert(params=base.params, spec=base.spec,
+                                    cost=base.cost)
+    else:
+        expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+
+    proxy = _BatchProxy(expert)
+    cfg = default_cascade_config(n_classes=n_classes, mu=mu, seed=seed,
+                                 expert_cost=expert.cost)
+    cascade = OnlineCascade(cfg, proxy)
+
+    preds = np.zeros(len(stream), np.int32)
+    t0 = time.time()
+    expert_batch_sizes = []
+    i = 0
+    import copy
+    while i < len(stream):
+        j = min(i + microbatch, len(stream))
+        batch_idx = list(range(i, j))
+        # Pass 1 (probe): predict which queries will reach the expert,
+        # using a CLONE of the rng so the replay sees identical jump draws.
+        probe_rng = copy.deepcopy(cascade.rng)
+        need = [k for k in batch_idx
+                if probe_route(cascade, k, stream.docs[k], probe_rng)]
+        # Batched expert forward for just the deferred subset.
+        if need:
+            if expert_kind == "model":
+                labels = expert.label_batch([stream.docs[k] for k in need])
+            else:
+                labels = [expert.label(k, stream.docs[k]) for k in need]
+            for k, y in zip(need, labels):
+                proxy.table[k] = int(y)
+            expert_batch_sizes.append(len(need))
+        # Pass 2 (replay): stream-order Algorithm 1 with online updates.
+        for k in batch_idx:
+            out = cascade.process(k, stream.docs[k])
+            preds[k] = out["prediction"]
+        i = j
+        if log_every and i % max(log_every, microbatch) < microbatch:
+            acc = float(np.mean(preds[:i] == stream.labels[:i]))
+            print(f"[{i}/{len(stream)}] acc={acc:.4f} "
+                  f"expert_calls={cascade.expert_calls} "
+                  f"({(time.time()-t0)/i*1000:.1f} ms/query)", flush=True)
+
+    acc = float(np.mean(preds == stream.labels))
+    frac = cascade.expert_calls / len(stream)
+    mean_eb = float(np.mean(expert_batch_sizes)) if expert_batch_sizes else 0
+    print(f"\nserved {len(stream)} queries in {time.time()-t0:.1f}s")
+    print(f"accuracy={acc:.4f}  expert_calls={cascade.expert_calls} "
+          f"({frac:.1%} of stream)  cost_saving={1-frac:.1%}")
+    print(f"mean expert batch={mean_eb:.1f}  "
+          f"probe mispredicts (single-call fallbacks)={proxy.fallback_calls}")
+    print(f"level fractions: "
+          f"{[round(f, 3) for f in (cascade.level_counts / len(stream))]}")
+    return {"accuracy": acc, "expert_calls": cascade.expert_calls,
+            "mean_expert_batch": mean_eb,
+            "fallback_calls": proxy.fallback_calls,
+            "predictions": preds}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="hatespeech",
+                    choices=["imdb", "hatespeech", "isear", "fever"])
+    ap.add_argument("--samples", type=int, default=2000)
+    ap.add_argument("--mu", type=float, default=3e-7)
+    ap.add_argument("--microbatch", type=int, default=16)
+    ap.add_argument("--expert", default="model",
+                    choices=["model", "simulated"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
+                 expert_kind=args.expert, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

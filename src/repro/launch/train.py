@@ -1,0 +1,102 @@
+"""Training driver: pjit a zoo model on whatever devices exist.
+
+On the CPU container this trains reduced configs (the examples use it for
+the ~100M-param student-expert run); on real hardware the same code path
+drives the production mesh — the sharding rules are identical to the
+dry-run's.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq 256 --lr 1e-3 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.streams import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tf_model
+from repro.optim import adamw
+from repro import sharding as shd
+from repro.sharding import param_pspecs
+
+
+def train(arch: str, smoke: bool = True, steps: int = 50, batch: int = 8,
+          seq: int = 256, lr: float = 1e-3, seed: int = 0,
+          ckpt: str = None, log_every: int = 10, remat: bool = False):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    mesh = make_host_mesh()
+    shd.set_mesh(mesh)
+    key = jax.random.PRNGKey(seed)
+    params = tf_model.init_params(key, cfg)
+    opt = adamw(lr)
+    opt_state = opt.init(params)
+
+    pspecs = param_pspecs(params)
+    params = jax.device_put(params, shd.tree_named_shardings(mesh, pspecs))
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt_state, batch_arrs):
+        def loss_fn(p):
+            loss, metrics = tf_model.train_loss(p, batch_arrs, cfg,
+                                                remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = opt.step(params, grads, opt_state)
+        return loss, params, opt_state
+
+    losses = []
+    t0 = time.time()
+    extras = {}
+    if cfg.encoder is not None:
+        extras["frames"] = jnp.zeros((batch, seq, cfg.d_model), cfg.jnp_dtype)
+    if cfg.vision_stub:
+        extras["image_embeds"] = jnp.zeros(
+            (batch, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype)
+    for i, b in enumerate(lm_batches(cfg.vocab, batch, seq, steps, seed)):
+        arrs = {k: jnp.asarray(v) for k, v in b.items()}
+        arrs.update(extras)
+        loss, params, opt_state = step_fn(params, opt_state, arrs)
+        losses.append(float(loss))
+        if log_every and (i + 1) % log_every == 0:
+            dt = time.time() - t0
+            print(f"step {i+1}/{steps} loss={losses[-1]:.4f} "
+                  f"({dt/(i+1):.2f}s/step)", flush=True)
+    if ckpt:
+        save_checkpoint(ckpt, {"params": params},
+                        metadata={"arch": arch, "steps": steps,
+                                  "final_loss": losses[-1]})
+        print(f"checkpoint written to {ckpt}")
+    shd.set_mesh(None)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", type=str, default=None)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+    losses = train(args.arch, smoke=args.smoke, steps=args.steps,
+                   batch=args.batch, seq=args.seq, lr=args.lr,
+                   seed=args.seed, ckpt=args.ckpt, remat=args.remat)
+    print(f"first loss {losses[0]:.4f} -> final loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

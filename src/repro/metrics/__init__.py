@@ -1,0 +1,14 @@
+from repro.metrics.costs import (
+    lr_flops, tinytf_flops, expert_prefill_flops, expert_decode_flops,
+    relative_costs, CostModel,
+)
+from repro.metrics.roofline import (
+    HW, V5E, roofline_terms, parse_collective_bytes, model_flops_6nd,
+)
+
+__all__ = [
+    "lr_flops", "tinytf_flops", "expert_prefill_flops",
+    "expert_decode_flops", "relative_costs", "CostModel",
+    "HW", "V5E", "roofline_terms", "parse_collective_bytes",
+    "model_flops_6nd",
+]

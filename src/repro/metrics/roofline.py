@@ -1,0 +1,114 @@
+"""Roofline math for TPU v5e + HLO collective-bytes parser.
+
+The container is CPU-only, so the three roofline terms are *derived* from
+the compiled artifact of the multi-device dry-run:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports the per-device partitioned module, so
+we multiply by ``chips`` to get the global numerators (and the chips cancel:
+terms are per-device seconds).  Collective bytes are not in cost_analysis —
+we parse the optimized HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # bf16 FLOP/s per chip
+    hbm_bw: float          # bytes/s per chip
+    ici_bw: float          # bytes/s per link
+    hbm_bytes: float       # capacity per chip
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+         hbm_bytes=16e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096]{1,0}"  (layout braces optional)
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COLL_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(?P<shape>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *result* bytes of collective ops in optimized HLO text.
+
+    Result size is the per-device wire proxy: an all-gather materializes the
+    full gathered buffer on each device; an all-reduce's result equals its
+    operand; reduce-scatter/all-to-all results bound the received bytes.
+    Async '-done' halves are skipped (the '-start' carries the shape).
+
+    Returns {'all-reduce': bytes, ..., 'total': bytes, 'count': n_ops}.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.match(line)
+        if m is None:
+            continue
+        if m.group("suffix") == "-done":
+            continue
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(m.group("shape")))
+        out[m.group("op")] += nbytes
+        count += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["count"] = count
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HW = V5E) -> Dict:
+    """Per-device seconds for each roofline term + the dominant one."""
+    t_compute = flops_per_dev / hw.peak_flops
+    t_memory = bytes_per_dev / hw.hbm_bw
+    t_coll = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    terms.update({
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of the bound that is useful compute (1.0 = at roofline)
+        "compute_fraction": t_compute / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops_6nd(cfg: ModelConfig, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D for training; callers use 2*N*D for a
+    forward pass."""
+    return 6.0 * cfg.active_param_count() * n_tokens

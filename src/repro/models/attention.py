@@ -1,0 +1,229 @@
+"""Attention: RoPE + chunked (flash-style) attention in pure JAX.
+
+The chunked implementations are the *model-level* oracles: they never
+materialize the full (Sq, Skv) score matrix, so compiled memory/byte counts
+reflect a flash-attention execution schedule (the Pallas kernels in
+``repro.kernels`` implement the same schedules for TPU; on CPU / in dry-runs
+these jnp paths are what XLA sees).
+
+Position conventions:
+* ``q_positions`` (Sq,) and ``kv_positions`` (Skv,) are absolute token
+  positions; kv slots holding no token carry position -1 (ring buffers).
+* causal mask: kv_pos <= q_pos;  window mask: kv_pos > q_pos - window;
+  validity: kv_pos >= 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd) with hd even; positions: (S,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """(Sq, Skv) boolean mask."""
+    m = kv_pos[None, :] >= 0
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention: scan over KV chunks with online softmax.
+# ---------------------------------------------------------------------------
+def direct_attention(q, k, v, *, q_positions, kv_positions,
+                     causal: bool = True,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-pass attention (no kv chunking).  Used for decode (Sq == 1),
+    where the (Sq, Skv) score matrix is small and a chunked scan would only
+    force GSPMD to reshard the cache inside the while loop."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = (q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+          ).astype(q.dtype)
+    # bf16 inputs, fp32 accumulation: never materializes an fp32 cache copy
+    s = jnp.einsum("bskgh,btkh->bskgt", qg, k,
+                   preferred_element_type=jnp.float32)
+    msk = _mask(q_positions, kv_positions, causal, window)     # (Sq, Skv)
+    s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions,
+                      causal: bool = True, window: Optional[int] = None,
+                      chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); H % K == 0.
+
+    Returns (B, Sq, H, hd).  Flash-style: never materializes (Sq, Skv).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    if Sq == 1:
+        return direct_attention(q, k, v, q_positions=q_positions,
+                                kv_positions=kv_positions, causal=causal,
+                                window=window)
+    if flags.UNROLL_FOR_COST_ANALYSIS:
+        chunk = Skv          # single-iteration scan: body counted once
+    chunk = min(chunk, Skv)
+    if Skv % chunk != 0:
+        # non-power-of-two memory (e.g. 1600 image tokens): largest
+        # divisor of Skv not exceeding the requested chunk
+        chunk = max(c for c in range(1, chunk + 1) if Skv % c == 0)
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+    scale = hd ** -0.5
+
+    qg = (q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+          ).astype(q.dtype)
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    kvp = kv_positions.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, pb = xs  # (B, C, K, hd), (B, C, K, hd), (C,)
+        # scores: (B, Sq, K, G, C); bf16 inputs, fp32 accumulation
+        s = jnp.einsum("bskgh,bckh->bskgc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        msk = _mask(q_positions, pb, causal, window)  # (Sq, C)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckh->bskgh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, kvp))
+    out = acc_f / jnp.maximum(l_f[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window prefill: scan over Q chunks, banded KV slice.
+# FLOPs O(S * (window + chunk)) instead of O(S^2).
+# ---------------------------------------------------------------------------
+def swa_prefill_attention(q, k, v, *, window: int, q_offset: int = 0,
+                          chunk: int = 1024) -> jax.Array:
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_q = S // chunk
+    # band covers [q_start - window, q_end); round to chunk multiples
+    band = ((window + chunk - 1) // chunk) * chunk + chunk
+    band = min(band, S)
+
+    def body(_, qi):
+        q_start = qi * chunk
+        kv_start = jnp.clip(q_start + chunk - band, 0, S - band)
+        qb = jax.lax.dynamic_slice_in_dim(q, q_start, chunk, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, kv_start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kv_start, band, axis=1)
+        q_pos = q_offset + q_start + jnp.arange(chunk)
+        kv_pos = q_offset + kv_start + jnp.arange(band)
+        ob = chunked_attention(
+            qb, kb, vb, q_positions=q_pos, kv_positions=kv_pos,
+            causal=True, window=window, chunk=min(1024, band))
+        return None, ob
+
+    if flags.UNROLL_FOR_COST_ANALYSIS:
+        outs = jnp.stack([body(None, jnp.int32(i))[1] for i in range(n_q)])
+    else:
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_q))
+    # outs: (n_q, B, chunk, H, hd) -> (B, S, H, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def causal_prefill_blocked(q, k, v, *, window: Optional[int] = None,
+                           q_offset: int = 0, chunk_q: int = 2048,
+                           chunk_kv: int = 1024) -> jax.Array:
+    """Exact-causal-FLOPs prefill: static Python loop over q blocks, each
+    attending only to its (static) kv prefix — the upper triangle is never
+    computed, matching what the Pallas flash kernel does on TPU."""
+    B, S, H, hd = q.shape
+    chunk_q = min(chunk_q, S)
+    assert S % chunk_q == 0
+    outs = []
+    for qi in range(S // chunk_q):
+        q_start = qi * chunk_q
+        kv_len = q_start + chunk_q
+        qb = q[:, q_start:q_start + chunk_q]
+        kb, vb = k[:, :kv_len], v[:, :kv_len]
+        q_pos = q_offset + q_start + jnp.arange(chunk_q)
+        kv_pos = q_offset + jnp.arange(kv_len)
+        outs.append(chunked_attention(
+            qb, kb, vb, q_positions=q_pos, kv_positions=kv_pos,
+            causal=True, window=window, chunk=min(chunk_kv, kv_len)))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def prefill_attention(q, k, v, *, window: Optional[int], q_offset: int = 0,
+                      chunk: int = 1024) -> jax.Array:
+    """Causal self-attention for prefill.
+
+    Windowed + long sequence -> banded O(S*W) path; otherwise statically
+    blocked causal path with exact lower-triangle FLOPs.
+    """
+    S = q.shape[1]
+    if window is not None and S > 2 * window:
+        return swa_prefill_attention(q, k, v, window=window,
+                                     q_offset=q_offset, chunk=chunk)
+    return causal_prefill_blocked(q, k, v, window=window, q_offset=q_offset,
+                                  chunk_kv=chunk)
+
+
+def cross_attention(q, k, v, *, kv_valid_len: Optional[int] = None,
+                    chunk: int = 1024, chunk_q: int = 2048) -> jax.Array:
+    """Non-causal attention over encoder/image memory.  Long queries are
+    processed in static q blocks so the (Sq, Sm) scores never materialize
+    at full size."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    kv_pos = jnp.arange(Skv)
+    if kv_valid_len is not None:
+        kv_pos = jnp.where(kv_pos < kv_valid_len, kv_pos, -1)
+
+    def block(qb):
+        return chunked_attention(
+            qb, k, v, q_positions=jnp.zeros((qb.shape[1],), jnp.int32),
+            kv_positions=kv_pos, causal=False, window=None, chunk=chunk)
+
+    if Sq <= chunk_q or Sq % chunk_q != 0:
+        return block(q)
+    outs = [block(q[:, i:i + chunk_q])
+            for i in range(0, Sq, chunk_q)]
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,17 @@
+"""Tracing-time flags.
+
+UNROLL_FOR_COST_ANALYSIS: when True, every inner lax.scan in the model
+(attention kv-chunks, SWA q-chunks, SSD chunks, MoE token groups) is
+replaced by straight-line code so XLA's HloCostAnalysis — which counts a
+while-loop body exactly once — sees the true op counts.  Only the dry-run's
+small (P, B) cost probes set this; production paths always use rolled
+scans.  The math is identical either way (same FLOPs), only intermediates'
+materialization differs, which is irrelevant at probe sizes.
+"""
+
+UNROLL_FOR_COST_ANALYSIS = False
+
+
+def set_unroll(v: bool) -> None:
+    global UNROLL_FOR_COST_ANALYSIS
+    UNROLL_FOR_COST_ANALYSIS = v

@@ -1,0 +1,121 @@
+"""Shared layers: norms, embeddings, dense MLPs, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+VOCAB_PAD = 512  # pad vocab so the lm-head dim divides the model axis
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return ((cfg.vocab + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, std=None):
+    std = std if std is not None else d_in ** -0.5
+    return trunc_normal(key, (d_in, d_out), std, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.  Scales kept in fp32; compute in fp32, cast back.
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps=1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(dtype)
+
+
+def rms_norm_headwise(x, scale, eps=1e-6):
+    """Per-head RMSNorm over the last dim (qk-norm, Qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    v = padded_vocab(cfg)
+    return {"table": trunc_normal(key, (v, cfg.d_model), cfg.d_model ** -0.5,
+                                  cfg.jnp_dtype)}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["table"][tokens]
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    v = padded_vocab(cfg)
+    return {"w": dense_init(key, cfg.d_model, v, cfg.jnp_dtype)}
+
+
+def lm_logits(params, embed_params, x, cfg: ModelConfig):
+    """x: (..., d_model) -> logits (..., padded_vocab); pad cols masked."""
+    if cfg.tie_embeddings:
+        w = embed_params["table"].T
+    else:
+        w = params["w"]
+    logits = jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)
+    v = padded_vocab(cfg)
+    if v != cfg.vocab:
+        pad_mask = (jnp.arange(v) >= cfg.vocab).astype(jnp.float32)
+        logits = logits - 1e9 * pad_mask
+    return logits
+
+
+def softmax_xent(logits, targets, mask=None):
+    """logits (..., V) fp32, targets (...) int32; mean over mask."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    losses = logz - gold
+    if mask is None:
+        return jnp.mean(losses)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, f, cfg.jnp_dtype),
+         "w_out": dense_init(ks[1], f, d, cfg.jnp_dtype)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, f, cfg.jnp_dtype)
+    return p
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    h = x @ params["w_in"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"]

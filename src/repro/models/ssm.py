@@ -1,0 +1,226 @@
+"""Mamba2 block (state-space duality / SSD) in pure JAX [arXiv:2405.21060].
+
+TPU-native chunked form: intra-chunk work is dense (L x L) matmuls that feed
+the MXU; inter-chunk state is carried by a short ``lax.scan`` (n_chunks
+steps).  This is the SSD algorithm itself, not a port of the CUDA selective
+scan — see DESIGN.md §4.  The Pallas kernel in ``repro.kernels.ssd_scan``
+implements the same schedule with explicit VMEM tiling; this module is the
+model-level oracle and what dry-runs lower.
+
+Layout (n_groups = 1):
+  in_proj : (D, 2*d_in + 2*d_state + n_heads) -> [z, x, B, C, dt]
+  conv    : depthwise causal conv over [x, B, C]  (kernel d_conv)
+  SSD     : h_t = h_{t-1} * exp(A dt_t) + dt_t * B_t (x) x_t ;  y_t = C_t h_t
+  gate    : y = RMSNorm(y * silu(z)) @ out_proj   (+ D skip)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.layers import dense_init, trunc_normal
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    d_xbc = d_in + 2 * s.d_state
+    return d_in, n_heads, d_xbc
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, d_xbc = dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * s.d_state + n_heads
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (n_heads,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))   # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, cfg.jnp_dtype),
+        "conv_w": trunc_normal(ks[1], (s.d_conv, d_xbc), d_xbc ** -0.5,
+                               cfg.jnp_dtype),
+        "conv_b": jnp.zeros((d_xbc,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_in, d, cfg.jnp_dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev: jax.Array = None):
+    """Depthwise causal conv.  xbc: (B, S, C); conv_w: (K, C).
+
+    ``prev``: (B, K-1, C) left context (decode / chunked prefill), zeros if
+    None.  Returns (out (B, S, C), new_prev (B, K-1, C)).
+    """
+    B, S, C = xbc.shape
+    K = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, C), xbc.dtype)
+    full = jnp.concatenate([prev, xbc], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        out = out + full[:, i:i + S, :].astype(jnp.float32) * conv_w[i]
+    out = out + conv_b
+    new_prev = full[:, -(K - 1):, :] if K > 1 else prev
+    return out.astype(xbc.dtype), new_prev
+
+
+def _segsum_decay(adt):
+    """adt: (..., L) of A*dt (<=0).  Returns (..., L, L) decay matrix
+    M[i, j] = exp(sum_{j<k<=i} adt_k) for i >= j, else 0."""
+    L = adt.shape[-1]
+    cum = jnp.cumsum(adt, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]         # (..., i, j)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, adt, dt, Bmat, Cmat, chunk: int,
+                init_state: jax.Array = None):
+    """SSD over a sequence, chunked.
+
+    x:    (B, S, H, P)  head inputs
+    adt:  (B, S, H)     A * dt  (negative)
+    dt:   (B, S, H)
+    Bmat: (B, S, N)     input projections (shared across heads, n_groups=1)
+    Cmat: (B, S, N)
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, S, H, Pdim = x.shape
+    N = Bmat.shape[-1]
+    L = min(chunk, S)
+    orig_S = S
+    if S % L != 0:
+        # ragged tail: pad with dt=0 tokens (decay 1, no state update —
+        # provably inert) and drop their outputs at the end
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        adt = jnp.pad(adt, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+    xc = x.reshape(Bsz, nc, L, H, Pdim).astype(jnp.float32)
+    ac = adt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    dc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bmat.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    Cc = Cmat.reshape(Bsz, nc, L, N).astype(jnp.float32)
+
+    # intra-chunk (dense, MXU-friendly)
+    decay = _segsum_decay(ac.transpose(0, 1, 3, 2))      # (B, nc, H, L, L)
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)           # (B, nc, L, L)
+    scores = cb[:, :, None] * decay                      # (B, nc, H, L, L)
+    xdt = xc * dc[..., None]                             # (B, nc, L, H, P)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", scores, xdt)
+
+    # chunk states: state_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    cum = jnp.cumsum(ac, axis=2)                         # (B, nc, L, H)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)         # (B, nc, L, H)
+    state_c = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                         decay_out * dc, Bc, xc)         # (B, nc, H, P, N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B, nc, H)
+
+    def body(h_prev, xs):
+        st, cd = xs                                      # (B,H,P,N), (B,H)
+        h_new = h_prev * cd[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = (jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (state_c.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if flags.UNROLL_FOR_COST_ANALYSIS else 1)
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B, nc, H, P, N)
+
+    # inter-chunk: y_i += C_i . (h_prev * exp(cum_i))
+    decay_in = jnp.exp(cum)                              # (B, nc, L, H)
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", Cc, h_prevs) \
+        * decay_in[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pdim)
+    if orig_S != S:
+        y = y[:, :orig_S]
+    return y, h_final
+
+
+def mamba_forward(params, x, cfg: ModelConfig,
+                  conv_prev=None, ssm_state=None, return_state=False):
+    """Full-sequence Mamba2 block.  x: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    d_in, n_heads, d_xbc = dims(cfg)
+    B, S, D = x.shape
+    proj = x @ params["in_proj"]                          # (B, S, ...)
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+               2 * d_in + 2 * s.d_state], axis=-1)
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    xbc, conv_new = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_prev)
+    xbc = jax.nn.silu(xbc)
+    xi, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                         # (H,)
+    adt = A * dt                                          # (B, S, H)
+    xh = xi.reshape(B, S, n_heads, s.head_dim)
+    y, h_final = ssd_chunked(xh, adt, dt, Bm, Cm, s.chunk,
+                             init_state=ssm_state)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * params["gate_norm"]
+    out = y.astype(cfg.jnp_dtype) @ params["out_proj"]
+    if return_state:
+        return out, (conv_new, h_final.astype(jnp.float32))
+    return out
+
+
+def mamba_decode_step(params, x, cfg: ModelConfig, conv_prev, ssm_state):
+    """Single-token step.  x: (B, 1, D); states threaded explicitly.
+
+    conv_prev: (B, d_conv-1, d_xbc); ssm_state: (B, H, P, N) fp32.
+    """
+    s = cfg.ssm
+    d_in, n_heads, _ = dims(cfg)
+    B = x.shape[0]
+    proj = x @ params["in_proj"]
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+               2 * d_in + 2 * s.d_state], axis=-1)
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)          # (B, 1, d_xbc)
+    xbc, conv_new = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_prev)
+    xbc = jax.nn.silu(xbc)
+    xi, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(A * dt)                                  # (B, H)
+    xh = xi[:, 0].reshape(B, n_heads, s.head_dim).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                     # (B, N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    # state update: h = h * dA + dt * B (x) x
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv, xh)
+    h_new = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * params["gate_norm"]
+    out = y.astype(cfg.jnp_dtype) @ params["out_proj"]
+    return out, (conv_new, h_new)

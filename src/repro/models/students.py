@@ -1,0 +1,135 @@
+"""Cascade student models (the paper's m_1 ... m_{N-1}).
+
+* ``LogisticRegression`` over hashed bag-of-words features — the paper's
+  level-1 model (cost 1 in its units).
+* ``TinyTransformer`` — a small encoder classifier standing in for
+  BERT-base/large (offline container: no HF weights).  The capability and
+  cost ordering LR << TinyTF << expert matches the paper's cascade; relative
+  costs are recomputed from our FLOP model (metrics.costs).
+
+Both expose the same functional interface:
+  init(key, spec)            -> params
+  predict(params, feats)     -> probability vector (batch, n_classes)
+  loss(params, feats, label) -> scalar xent (for OGD updates)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclass(frozen=True)
+class LRSpec:
+    n_features: int = 2048
+    n_classes: int = 2
+
+
+@dataclass(frozen=True)
+class TinyTFSpec:
+    vocab: int = 4096          # hashed token ids
+    max_len: int = 128
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    n_classes: int = 2
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression
+# ---------------------------------------------------------------------------
+def lr_init(key, spec: LRSpec):
+    return {"w": jnp.zeros((spec.n_features, spec.n_classes), jnp.float32),
+            "b": jnp.zeros((spec.n_classes,), jnp.float32)}
+
+
+def lr_logits(params, feats):
+    return feats @ params["w"] + params["b"]
+
+
+def lr_predict(params, feats):
+    return jax.nn.softmax(lr_logits(params, feats), axis=-1)
+
+
+def lr_loss(params, feats, labels):
+    logits = lr_logits(params, feats)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Tiny transformer encoder classifier
+# ---------------------------------------------------------------------------
+def tinytf_init(key, spec: TinyTFSpec):
+    ks = jax.random.split(key, 2 + spec.n_layers)
+    d, f, H = spec.d_model, spec.d_ff, spec.n_heads
+    params = {
+        "embed": (jax.random.normal(ks[0], (spec.vocab, d)) * 0.02),
+        "pos": (jax.random.normal(ks[1], (spec.max_len, d)) * 0.02),
+        "layers": [],
+        "cls_w": jnp.zeros((d, spec.n_classes), jnp.float32),
+        "cls_b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+    layers = []
+    for i in range(spec.n_layers):
+        lk = jax.random.split(ks[2 + i], 5)
+        layers.append({
+            "wq": dense_init(lk[0], d, d, jnp.float32),
+            "wk": dense_init(lk[1], d, d, jnp.float32),
+            "wv": dense_init(lk[2], d, d, jnp.float32),
+            "wo": dense_init(lk[3], d, d, jnp.float32),
+            "w1": dense_init(lk[4], d, f, jnp.float32),
+            "w2": dense_init(jax.random.fold_in(lk[4], 1), f, d, jnp.float32),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+        })
+    params["layers"] = layers
+    return params
+
+
+def _ln(x, scale):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def tinytf_logits(params, tokens, spec: TinyTFSpec):
+    """tokens: (B, L) int32 hashed ids; 0 = pad."""
+    B, L = tokens.shape
+    mask = (tokens > 0)
+    h = params["embed"][tokens] + params["pos"][None, :L]
+    H = spec.n_heads
+    hd = spec.d_model // H
+    neg = jnp.where(mask, 0.0, -1e30)[:, None, None, :]   # (B,1,1,L)
+    for lp in params["layers"]:
+        x = _ln(h, lp["ln1"])
+        q = (x @ lp["wq"]).reshape(B, L, H, hd).transpose(0, 2, 1, 3)
+        k = (x @ lp["wk"]).reshape(B, L, H, hd).transpose(0, 2, 1, 3)
+        v = (x @ lp["wv"]).reshape(B, L, H, hd).transpose(0, 2, 1, 3)
+        s = q @ k.transpose(0, 1, 3, 2) * hd ** -0.5 + neg
+        att = jax.nn.softmax(s, axis=-1) @ v               # (B,H,L,hd)
+        att = att.transpose(0, 2, 1, 3).reshape(B, L, spec.d_model)
+        h = h + att @ lp["wo"]
+        x = _ln(h, lp["ln2"])
+        h = h + jax.nn.gelu(x @ lp["w1"]) @ lp["w2"]
+    # masked mean pool
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled @ params["cls_w"] + params["cls_b"]
+
+
+def tinytf_predict(params, tokens, spec: TinyTFSpec):
+    return jax.nn.softmax(tinytf_logits(params, tokens, spec), axis=-1)
+
+
+def tinytf_loss(params, tokens, labels, spec: TinyTFSpec):
+    logits = tinytf_logits(params, tokens, spec)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

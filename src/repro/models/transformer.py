@@ -1,0 +1,502 @@
+"""Model assembly: period-blocks, scan-over-periods stacks, LM API.
+
+Every architecture is a repeating ``period`` of blocks (see configs.base).
+Parameters and KV/SSM caches are stacked over ``n_periods`` and driven by
+``lax.scan`` so the lowered HLO stays small regardless of depth (126-layer
+llama3-405b scans 126 homogeneous periods).
+
+Public API (all pure functions):
+  init_params(key, cfg)                        -> params
+  train_loss(params, batch, cfg)               -> (loss, metrics)
+  encode(params, frames_or_none, cfg)          -> memory            (encdec)
+  prefill(params, batch, cfg, cache_len)       -> (last_logits, cache)
+  decode_step(params, cache, tokens, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, CROSS, MAMBA, ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    chunked_attention, cross_attention, prefill_attention, rope)
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, embed, init_embed, init_lm_head,
+    init_mlp, init_norm, lm_logits, rms_norm_headwise, softmax_xent)
+from repro.models.moe import init_moe, moe_ffn
+from repro.sharding import constrain, constrain_tokens, batch_axes
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_attn(key, cfg: ModelConfig, cross: bool = False):
+    a = cfg.attn
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, a.n_heads * a.head_dim, cfg.jnp_dtype),
+        "wk": dense_init(ks[1], d, a.n_kv_heads * a.head_dim, cfg.jnp_dtype),
+        "wv": dense_init(ks[2], d, a.n_kv_heads * a.head_dim, cfg.jnp_dtype),
+        "wo": dense_init(ks[3], a.n_heads * a.head_dim, d, cfg.jnp_dtype),
+    }
+    if a.qk_norm and not cross:
+        p["q_scale"] = jnp.ones((a.head_dim,), jnp.float32)
+        p["k_scale"] = jnp.ones((a.head_dim,), jnp.float32)
+    return p
+
+
+def _ffn_kind(cfg: ModelConfig, period_idx: int) -> Optional[str]:
+    if cfg.moe is not None and period_idx in cfg.moe_period_idx:
+        return "moe"
+    if cfg.d_ff > 0:
+        return "mlp"
+    return None
+
+
+def _init_block(key, cfg: ModelConfig, period_idx: int):
+    kind = cfg.period[period_idx]
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg)}
+    if kind == ATTN:
+        p["attn"] = _init_attn(ks[0], cfg)
+    elif kind == CROSS:
+        p["attn"] = _init_attn(ks[0], cfg)
+        p["norm_x"] = init_norm(cfg)
+        p["cross_attn"] = _init_attn(ks[3], cfg, cross=True)
+    elif kind == MAMBA:
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg)
+    ffn = _ffn_kind(cfg, period_idx)
+    if ffn == "moe":
+        p["norm2"] = init_norm(cfg)
+        p["moe"] = init_moe(ks[1], cfg)
+    elif ffn == "mlp":
+        p["norm2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_period_stack(key, cfg: ModelConfig, n_periods: int):
+    """Stacked params: {'b{i}': leaves with leading (n_periods,) dim}."""
+    blocks = {}
+    for i in range(len(cfg.period)):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_periods)
+        blocks[f"b{i}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, i))(keys)
+    return blocks
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": init_embed(ks[0], cfg),
+        "final_norm": init_norm(cfg),
+        "blocks": _init_period_stack(ks[1], cfg, cfg.n_periods),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_lm_head(ks[2], cfg)
+    if cfg.encoder is not None:
+        enc_cfg = _encoder_cfg(cfg)
+        params["encoder"] = {
+            "blocks": _init_period_stack(ks[3], enc_cfg,
+                                         cfg.encoder.n_layers),
+            "final_norm": init_norm(cfg),
+        }
+    return params
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    a = dataclasses.replace(cfg.attn, causal=False, window=None)
+    return dataclasses.replace(
+        cfg, period=(ATTN,), moe_period_idx=(), moe=None, attn=a,
+        n_layers=cfg.encoder.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Sublayers
+# ---------------------------------------------------------------------------
+def _project_qkv(p, x, cfg: ModelConfig, positions, with_rope=True,
+                 cross=False):
+    a = cfg.attn
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, a.n_heads, a.head_dim)
+    k = (x @ p["wk"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    v = (x @ p["wv"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    if a.qk_norm and not cross:
+        q = rms_norm_headwise(q, p["q_scale"])
+        k = rms_norm_headwise(k, p["k_scale"])
+    if with_rope:
+        q = rope(q, positions, a.rope_theta)
+        k = rope(k, positions, a.rope_theta)
+    q = constrain(q, (batch_axes(), None, "model", None))
+    return q, k, v
+
+
+def _attn_out(p, out, cfg: ModelConfig):
+    B, S = out.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def _self_attn_full(p, h, cfg: ModelConfig, causal=True, q_offset=0):
+    """Full-sequence self-attention (train / prefill / encoder).
+    Returns (out, (k, v)) so prefill can build caches."""
+    a = cfg.attn
+    S = h.shape[1]
+    positions = q_offset + jnp.arange(S)
+    x = apply_norm(p["norm1"], h, cfg)
+    q, k, v = _project_qkv(p["attn"], x, cfg, positions)
+    if causal:
+        out = prefill_attention(q, k, v, window=a.window, q_offset=q_offset)
+    else:
+        out = chunked_attention(q, k, v, q_positions=positions,
+                                kv_positions=positions, causal=False)
+    return _attn_out(p["attn"], out, cfg), (k, v)
+
+
+def _self_attn_decode(p, h, cfg: ModelConfig, cache, pos):
+    """One-token self-attention against the (ring-buffer) cache.
+
+    cache: {'k': (B, W, K, hd), 'v': ..., 'pos': (W,) int32}.
+    """
+    a = cfg.attn
+    B = h.shape[0]
+    x = apply_norm(p["norm1"], h, cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(p["attn"], x, cfg, positions)
+    W = cache["k"].shape[1]
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, slot, axis=0)
+    out = chunked_attention(q, ck, cv, q_positions=positions,
+                            kv_positions=cpos, causal=True, window=a.window)
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+    return _attn_out(p["attn"], out, cfg), new_cache
+
+
+def _cross_attn(p, h, cfg: ModelConfig, memory=None, mem_kv=None):
+    """Cross-attention to encoder/image memory.  Either raw ``memory``
+    (B, Sm, D) or precomputed ``mem_kv`` (k, v) from the cache."""
+    x = apply_norm(p["norm_x"], h, cfg)
+    a = cfg.attn
+    B, S, _ = x.shape
+    q = (x @ p["cross_attn"]["wq"]).reshape(B, S, a.n_heads, a.head_dim)
+    q = constrain(q, (batch_axes(), None, "model", None))
+    if mem_kv is None:
+        Sm = memory.shape[1]
+        k = (memory @ p["cross_attn"]["wk"]).reshape(B, Sm, a.n_kv_heads,
+                                                     a.head_dim)
+        v = (memory @ p["cross_attn"]["wv"]).reshape(B, Sm, a.n_kv_heads,
+                                                     a.head_dim)
+    else:
+        k, v = mem_kv
+    out = cross_attention(q, k, v)
+    return _attn_out(p["cross_attn"], out, cfg), (k, v)
+
+
+def _ffn(p, h, cfg: ModelConfig, period_idx: int):
+    """Returns (delta, aux_loss)."""
+    kind = _ffn_kind(cfg, period_idx)
+    if kind is None:
+        return jnp.zeros_like(h), jnp.zeros((), jnp.float32)
+    x = apply_norm(p["norm2"], h, cfg)
+    if kind == "moe":
+        y, aux = moe_ffn(x, p["moe"], cfg)
+        return y, aux
+    return apply_mlp(p["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Period application (one scan step)
+# ---------------------------------------------------------------------------
+def _apply_period_full(pp, h, cfg: ModelConfig, memory, mode: str,
+                       cache_len: int = 0):
+    """Apply one period in full-sequence mode.  Returns (h, aux, caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    B, S, _ = h.shape
+    for i, kind in enumerate(cfg.period):
+        p = pp[f"b{i}"]
+        c = {}
+        if kind == ATTN:
+            out, (k, v) = _self_attn_full(p, h, cfg, causal=cfg.attn.causal)
+            h = h + out
+            if mode == "prefill":
+                c.update(_build_kv_cache(k, v, cfg, cache_len))
+        elif kind == CROSS:
+            out, (k, v) = _self_attn_full(p, h, cfg, causal=True)
+            h = h + out
+            xout, (xk, xv) = _cross_attn(p, h, cfg, memory=memory)
+            h = h + xout
+            if mode == "prefill":
+                c.update(_build_kv_cache(k, v, cfg, cache_len))
+                c["xk"], c["xv"] = xk, xv
+        elif kind == MAMBA:
+            if mode == "prefill":
+                x = apply_norm(p["norm1"], h, cfg)
+                out, (conv_st, ssm_st) = ssm_mod.mamba_forward(
+                    p["mamba"], x, cfg, return_state=True)
+                c["conv"], c["ssm"] = conv_st, ssm_st
+            else:
+                x = apply_norm(p["norm1"], h, cfg)
+                out = ssm_mod.mamba_forward(p["mamba"], x, cfg)
+            h = h + out
+        delta, aux = _ffn(p, h, cfg, i)
+        h = h + delta
+        aux_total = aux_total + aux
+        h = constrain_tokens(h)
+        if mode == "prefill":
+            caches[f"b{i}"] = c
+    return h, aux_total, caches
+
+
+def _build_kv_cache(k, v, cfg: ModelConfig, cache_len: int):
+    """Turn prefill K/V (B, S, K, hd) into a ring cache of length cache_len.
+
+    All production shapes keep S a multiple of the window, so the ring
+    layout slot = pos % W reduces to a plain slice of the last W tokens.
+    """
+    B, S = k.shape[:2]
+    W = cache_len
+    if S >= W:
+        assert S % W == 0, (S, W)
+        ck, cv = k[:, S - W:], v[:, S - W:]
+        cpos = jnp.arange(S - W, S, dtype=jnp.int32)
+    else:
+        pad = W - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.concatenate(
+            [jnp.arange(S, dtype=jnp.int32),
+             jnp.full((pad,), -1, jnp.int32)])
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def _apply_period_decode(pp, h, cfg: ModelConfig, cache, pos):
+    """One period, one token.  Returns (h, new_cache)."""
+    new_cache = {}
+    for i, kind in enumerate(cfg.period):
+        p = pp[f"b{i}"]
+        c = cache[f"b{i}"]
+        nc = {}
+        if kind == ATTN:
+            out, nc = _self_attn_decode(p, h, cfg, c, pos)
+            h = h + out
+        elif kind == CROSS:
+            out, nc = _self_attn_decode(p, h, cfg, c, pos)
+            h = h + out
+            xout, _ = _cross_attn(p, h, cfg, mem_kv=(c["xk"], c["xv"]))
+            h = h + xout
+            nc["xk"], nc["xv"] = c["xk"], c["xv"]
+        elif kind == MAMBA:
+            x = apply_norm(p["norm1"], h, cfg)
+            out, (conv_st, ssm_st) = ssm_mod.mamba_decode_step(
+                p["mamba"], x, cfg, c["conv"], c["ssm"])
+            h = h + out
+            nc = {"conv": conv_st, "ssm": ssm_st}
+        delta, _ = _ffn(p, h, cfg, i)
+        h = h + delta
+        new_cache[f"b{i}"] = nc
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over periods)
+# ---------------------------------------------------------------------------
+def _stack_full(params_blocks, h, cfg: ModelConfig, memory, mode: str,
+                cache_len: int = 0, remat: bool = False,
+                unroll: bool = False):
+    def body(carry, pp):
+        h, aux = carry
+        fn = _apply_period_full
+        if remat:
+            fn = jax.checkpoint(
+                functools.partial(_apply_period_full, cfg=cfg, memory=memory,
+                                  mode=mode, cache_len=cache_len),
+                policy=jax.checkpoint_policies.nothing_saveable)
+            h2, aux2, caches = fn(pp, h)
+        else:
+            h2, aux2, caches = fn(pp, h, cfg, memory, mode, cache_len)
+        return (h2, aux + aux2), caches
+
+    n = jax.tree.leaves(params_blocks)[0].shape[0]
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    params_blocks,
+                                    unroll=n if unroll else 1)
+    return h, aux, caches
+
+
+def _stack_decode(params_blocks, h, cfg: ModelConfig, cache, pos,
+                  unroll: bool = False):
+    def body(h, xs):
+        pp, c = xs
+        h, nc = _apply_period_decode(pp, h, cfg, c, pos)
+        return h, nc
+
+    n = jax.tree.leaves(params_blocks)[0].shape[0]
+    h, new_cache = jax.lax.scan(body, h, (params_blocks, cache),
+                                unroll=n if unroll else 1)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+def encode(params, frames, cfg: ModelConfig, unroll: bool = False):
+    """Encoder forward (enc-dec archs).  frames: (B, S_enc, D) embeddings
+    (modality frontend is the sanctioned stub)."""
+    enc_cfg = _encoder_cfg(cfg)
+    h = constrain_tokens(frames.astype(cfg.jnp_dtype))
+    h, _, _ = _stack_full(params["encoder"]["blocks"], h, enc_cfg,
+                          memory=None, mode="train", unroll=unroll)
+    return apply_norm(params["encoder"]["final_norm"], h, cfg)
+
+
+def _memory_from_batch(params, batch, cfg: ModelConfig,
+                       unroll: bool = False):
+    if cfg.encoder is not None:
+        return encode(params, batch["frames"], cfg, unroll=unroll)
+    if cfg.vision_stub:
+        return batch["image_embeds"].astype(cfg.jnp_dtype)
+    return None
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = False,
+            unroll: bool = False):
+    """Teacher-forced decoder forward.  Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    memory = _memory_from_batch(params, batch, cfg, unroll=unroll)
+    h = embed(params["embed"], tokens, cfg)
+    h = constrain_tokens(h)
+    h, aux, _ = _stack_full(params["blocks"], h, cfg, memory, mode="train",
+                            remat=remat, unroll=unroll)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params.get("lm_head", {}), params["embed"], h, cfg)
+    logits = constrain(logits, (batch_axes(), None, "model"))
+    return logits, aux
+
+
+def _hidden_for_loss(params, batch, cfg: ModelConfig, remat, unroll):
+    tokens = batch["tokens"]
+    memory = _memory_from_batch(params, batch, cfg, unroll=unroll)
+    h = embed(params["embed"], tokens, cfg)
+    h = constrain_tokens(h)
+    h, aux, _ = _stack_full(params["blocks"], h, cfg, memory, mode="train",
+                            remat=remat, unroll=unroll)
+    return apply_norm(params["final_norm"], h, cfg), aux
+
+
+def train_loss(params, batch, cfg: ModelConfig, remat: bool = True,
+               unroll: bool = False, loss_chunk: int = 0):
+    """Teacher-forced LM loss.  ``loss_chunk`` > 0 computes the softmax
+    cross-entropy in sequence chunks wrapped in jax.checkpoint so the
+    (B, S, vocab) fp32 logits (and their gradient) are never materialized
+    at once — a beyond-paper memory optimization (§Perf)."""
+    if loss_chunk <= 0:
+        logits, aux = forward(params, batch, cfg, remat=remat,
+                              unroll=unroll)
+        loss = softmax_xent(logits, batch["targets"], batch.get("mask"))
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    h, aux = _hidden_for_loss(params, batch, cfg, remat, unroll)
+    B, S, D = h.shape
+    n = S // loss_chunk
+    assert S % loss_chunk == 0, (S, loss_chunk)
+    hc = h.reshape(B, n, loss_chunk, D).transpose(1, 0, 2, 3)
+    tc = batch["targets"].reshape(B, n, loss_chunk).transpose(1, 0, 2)
+    head = params.get("lm_head", {})
+
+    @jax.checkpoint
+    def chunk_loss(hb, tb):
+        logits = lm_logits(head, params["embed"], hb, cfg)
+        logits = constrain(logits, (batch_axes(), None, "model"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, xs):
+        hb, tb = xs
+        return acc + chunk_loss(hb, tb), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    loss = total / (B * S)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: Optional[int] = None,
+            unroll: bool = False):
+    """Process the prompt, build caches.  Returns (last_logits, cache).
+
+    cache_len defaults to prompt length (full attention) or the attention
+    window (SWA archs).
+    """
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    if cache_len is None:
+        cache_len = S if cfg.attn is None or cfg.attn.window is None \
+            else min(S, cfg.attn.window)
+    memory = _memory_from_batch(params, batch, cfg, unroll=unroll)
+    h = embed(params["embed"], tokens, cfg)
+    h = constrain_tokens(h)
+    h, _, caches = _stack_full(params["blocks"], h, cfg, memory,
+                               mode="prefill", cache_len=cache_len,
+                               unroll=unroll)
+    h_last = apply_norm(params["final_norm"], h[:, -1:], cfg)
+    logits = lm_logits(params.get("lm_head", {}), params["embed"], h_last,
+                       cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                unroll: bool = False):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (the
+    absolute position being written).  Returns (logits (B, V), new_cache)."""
+    h = embed(params["embed"], tokens, cfg)
+    h, new_cache = _stack_decode(params["blocks"], h, cfg, cache, pos,
+                                 unroll=unroll)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params.get("lm_head", {}), params["embed"], h, cfg)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for dry-runs: ShapeDtypeStructs, no allocation)
+# ---------------------------------------------------------------------------
+def cache_struct(cfg: ModelConfig, batch: int, cache_len: int,
+                 memory_len: int = 0):
+    """ShapeDtypeStruct pytree matching what ``prefill`` would emit."""
+    import numpy as np
+    P = cfg.n_periods
+    dt = cfg.jnp_dtype
+    a = cfg.attn
+    out = {}
+    for i, kind in enumerate(cfg.period):
+        W = cache_len if a is None or a.window is None \
+            else min(cache_len, a.window)
+        c = {}
+        if kind in (ATTN, CROSS):
+            c["k"] = jax.ShapeDtypeStruct((P, batch, W, a.n_kv_heads,
+                                           a.head_dim), dt)
+            c["v"] = jax.ShapeDtypeStruct((P, batch, W, a.n_kv_heads,
+                                           a.head_dim), dt)
+            c["pos"] = jax.ShapeDtypeStruct((P, W), jnp.int32)
+        if kind == CROSS:
+            c["xk"] = jax.ShapeDtypeStruct((P, batch, memory_len,
+                                            a.n_kv_heads, a.head_dim), dt)
+            c["xv"] = jax.ShapeDtypeStruct((P, batch, memory_len,
+                                            a.n_kv_heads, a.head_dim), dt)
+        if kind == MAMBA:
+            s = cfg.ssm
+            d_in, n_heads, d_xbc = ssm_mod.dims(cfg)
+            c["conv"] = jax.ShapeDtypeStruct((P, batch, s.d_conv - 1, d_xbc),
+                                             dt)
+            c["ssm"] = jax.ShapeDtypeStruct((P, batch, n_heads, s.head_dim,
+                                             s.d_state), jnp.float32)
+        out[f"b{i}"] = c
+    return out

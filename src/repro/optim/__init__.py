@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, adamw, ogd_sqrt_t, clip_by_global_norm,
+)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw", "ogd_sqrt_t",
+           "clip_by_global_norm"]

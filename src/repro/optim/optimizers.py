@@ -1,0 +1,142 @@
+"""Optimizers built from scratch (no optax offline).
+
+Functional interface:
+  opt = adam(lr=1e-3)
+  state = opt.init(params)
+  params, state = opt.step(params, grads, state)
+
+``ogd_sqrt_t`` is the paper's online gradient descent with the no-regret
+learning rate eta_t = eta0 * t^{-1/2} (Theorem 3.1/3.2, Zinkevich 2003).
+
+Adam supports ``state_dtype`` (e.g. bfloat16 moments) — the memory knob used
+for the llama3-405b train_4k fit — and all optimizers apply updates in fp32
+and cast back to the param dtype (mixed-precision friendly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    step: Callable[[Any, Any, Any], tuple]
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def _apply(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr: float, clip: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return _apply(params, updates), {"count": state["count"] + 1}
+
+    return Optimizer(init, step, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9,
+             clip: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        m = jax.tree.map(lambda m0, g: beta * m0 + g.astype(jnp.float32),
+                         state["m"], grads)
+        updates = jax.tree.map(lambda m_: -lr * m_, m)
+        return _apply(params, updates), {"count": state["count"] + 1, "m": m}
+
+    return Optimizer(init, step, "momentum")
+
+
+def _adam_like(lr, b1, b2, eps, weight_decay, clip, state_dtype, name):
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, sdt)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        t = state["count"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m0, g: (b1 * m0.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)).astype(sdt),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v0, g: (b2 * v0.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(sdt),
+            state["v"], grads)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            u = -lr * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, params, m, v)
+        return _apply(params, updates), {"count": t, "m": m, "v": v}
+
+    return Optimizer(init, step, name)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         clip: Optional[float] = None,
+         state_dtype: str = "float32") -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, 0.0, clip, state_dtype, "adam")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip: Optional[float] = 1.0,
+          state_dtype: str = "float32") -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, weight_decay, clip, state_dtype,
+                      "adamw")
+
+
+def ogd_sqrt_t(eta0: float, clip: Optional[float] = None) -> Optimizer:
+    """Online gradient descent with eta_t = eta0 / sqrt(t) (no-regret)."""
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def step(params, grads, state):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        t = state["count"] + 1
+        eta = eta0 * jax.lax.rsqrt(t.astype(jnp.float32))
+        updates = jax.tree.map(lambda g: -eta * g.astype(jnp.float32), grads)
+        return _apply(params, updates), {"count": t}
+
+    return Optimizer(init, step, "ogd")

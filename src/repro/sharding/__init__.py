@@ -1,0 +1,9 @@
+from repro.sharding.specs import (
+    set_mesh, get_mesh, constrain, constrain_tokens, batch_axes,
+    param_pspecs, named_sharding, tree_named_shardings,
+)
+
+__all__ = [
+    "set_mesh", "get_mesh", "constrain", "constrain_tokens", "batch_axes",
+    "param_pspecs", "named_sharding", "tree_named_shardings",
+]

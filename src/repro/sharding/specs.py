@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+The production mesh is ``(pod, data, model)`` (multi-pod) or ``(data, model)``
+(single pod).  Rules:
+
+* batch-like dims            -> ('pod', 'data')   [whatever subset exists]
+* attention heads / d_ff / experts' ff / mamba d_inner / vocab -> 'model'
+* everything else replicated.
+
+A module-level "current mesh" avoids threading the mesh through every model
+function; ``constrain`` is a no-op when no mesh is set (single-device tests)
+or when a dim is not divisible by the axis size (e.g. batch=1 long_500k).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+# Sequence parallelism (beyond-paper, §Perf): shard the sequence dim of
+# inter-block activations over 'model' in addition to batch over
+# (pod,data).  GSPMD then turns the tensor-parallel all-reduces into
+# reduce-scatter/all-gather pairs and the stored scan carries shrink by
+# the model-axis size (Megatron-SP pattern, via sharding constraints).
+SEQ_PARALLEL = False
+
+
+def set_seq_parallel(v: bool) -> None:
+    global SEQ_PARALLEL
+    SEQ_PARALLEL = v
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    """The mesh axes a batch dim shards over ('pod','data' subset)."""
+    mesh = mesh or _CURRENT_MESH
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    size = _axis_size(mesh, axes)
+    return size > 0 and dim % size == 0
+
+
+def constrain(x, spec: Sequence) -> jax.Array:
+    """with_sharding_constraint against the current mesh.
+
+    ``spec`` entries are mesh-axis names (or tuples of them) per dim, or None.
+    Dims whose size is not divisible by the axis size are silently
+    replicated instead, so the same model code serves batch=256 training and
+    batch=1 long-context decode.
+    """
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    cleaned = []
+    for dim, axes in zip(x.shape, spec):
+        if axes is None:
+            cleaned.append(None)
+            continue
+        present = tuple(a for a in (axes if isinstance(axes, tuple) else (axes,))
+                        if a in mesh.axis_names)
+        if present and _fits(mesh, dim, present):
+            cleaned.append(present if len(present) > 1 else present[0])
+        else:
+            cleaned.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))
+
+
+def constrain_tokens(x) -> jax.Array:
+    """Shard (B, S, ...) activations: batch over (pod,data); if batch cannot
+    shard (batch=1 long-context), shard the sequence dim instead.  With
+    SEQ_PARALLEL also shard the sequence dim over 'model'."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    baxes = batch_axes(mesh)
+    seq_ax = "model" if (SEQ_PARALLEL and x.ndim >= 2
+                         and "model" in mesh.axis_names
+                         and _fits(mesh, x.shape[1], ("model",))) else None
+    if baxes and _fits(mesh, x.shape[0], baxes):
+        return constrain(x, (baxes, seq_ax) + (None,) * (x.ndim - 2))
+    if x.ndim >= 2 and baxes and _fits(mesh, x.shape[1], baxes):
+        return constrain(x, (None, baxes) + (None,) * (x.ndim - 2))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (path-based rules)
+# ---------------------------------------------------------------------------
+# Each rule: (path regex, spec builder taking ndim -> tuple). The leading
+# n_periods stacking dim (present on block params) is always replicated.
+# Specs below are for the *unstacked* suffix dims.
+
+_RULES = [
+    # embeddings / lm head: shard vocab over model
+    (r"embed/table$",        lambda nd: ("model", None)),
+    (r"lm_head/w$",          lambda nd: (None, "model")),
+    # attention projections
+    (r"(attn|self_attn|cross_attn)/wq$", lambda nd: (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wk$", lambda nd: (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wv$", lambda nd: (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wo$", lambda nd: ("model", None)),
+    # dense mlp
+    (r"mlp/w_gate$",         lambda nd: (None, "model")),
+    (r"mlp/w_in$",           lambda nd: (None, "model")),
+    (r"mlp/w_out$",          lambda nd: ("model", None)),
+    # moe: tensor mode shards expert ff dim; router replicated
+    (r"moe/w_gate$",         lambda nd: (None, None, "model")),
+    (r"moe/w_in$",           lambda nd: (None, None, "model")),
+    (r"moe/w_out$",          lambda nd: (None, "model", None)),
+    (r"moe/router$",         lambda nd: (None, None)),
+    # mamba: shard d_inner / heads over model
+    (r"mamba/in_proj$",      lambda nd: (None, "model")),
+    (r"mamba/conv_w$",       lambda nd: (None, "model")),
+    (r"mamba/conv_b$",       lambda nd: ("model",)),
+    (r"mamba/A_log$",        lambda nd: ("model",)),
+    (r"mamba/D$",            lambda nd: ("model",)),
+    (r"mamba/dt_bias$",      lambda nd: ("model",)),
+    (r"mamba/gate_norm$",    lambda nd: ("model",)),
+    (r"mamba/out_proj$",     lambda nd: ("model", None)),
+]
+
+_EXPERT_MODE_RULES = [
+    # expert-parallel: shard the expert dim instead of ff
+    (r"moe/w_gate$",         lambda nd: ("model", None, None)),
+    (r"moe/w_in$",           lambda nd: ("model", None, None)),
+    (r"moe/w_out$",          lambda nd: ("model", None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, ndim: int, stacked: bool,
+                  moe_mode: str = "tensor") -> P:
+    rules = list(_RULES)
+    if moe_mode == "expert":
+        rules = _EXPERT_MODE_RULES + rules
+    for pat, builder in rules:
+        if re.search(pat, path_str):
+            suffix = builder(ndim)
+            if stacked:
+                # leading n_periods dim replicated; pad/trim to ndim
+                suffix = (None,) + tuple(suffix)
+            suffix = tuple(suffix)[:ndim]
+            suffix = suffix + (None,) * (ndim - len(suffix))
+            return P(*suffix)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params, moe_mode: str = "tensor"):
+    """Tree of PartitionSpec matching ``params`` (shapes or arrays)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = "/blocks/" in ("/" + ps + "/") or ps.startswith("blocks/")
+        return spec_for_path(ps, ndim, stacked, moe_mode)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {
+        "params": {
+            "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "layers": [
+                {"a": jnp.ones((2,), jnp.bfloat16)},
+                {"a": jnp.zeros((2,), jnp.bfloat16)},
+            ],
+        },
+        "step": jnp.int32(7),
+    }
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree, metadata={"arch": "test", "n": 3})
+    restored, meta = restore_checkpoint(path)
+    assert meta == {"arch": "test", "n": 3}
+    assert int(restored["step"]) == 7
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w"]),
+                                  restored["params"]["w"])
+    assert restored["params"]["layers"][0]["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(tree["params"]["layers"][0]["a"], np.float32),
+        np.asarray(restored["params"]["layers"][0]["a"], np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tf
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "m")
+    save_checkpoint(path, params)
+    restored, _ = restore_checkpoint(path)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

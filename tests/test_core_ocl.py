@@ -1,0 +1,152 @@
+"""Unit + property tests for the OCL core (Algorithm 1, MDP, deferral)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    OnlineCascade, SimulatedExpert, default_cascade_config, episode_cost)
+from repro.core.deferral import (
+    DeferralSpec, deferral_init, deferral_prob)
+from repro.data import make_stream
+
+
+# ---------------------------------------------------------------------------
+# MDP cost (Eq. 1)
+# ---------------------------------------------------------------------------
+def test_episode_cost_no_defer():
+    """If level 1 never defers, cost = its prediction loss."""
+    f = jnp.array([0.0, 0.0, 0.0])
+    losses = jnp.array([0.7, 0.1, 0.0])
+    costs = jnp.array([10.0, 100.0, 0.0])
+    j, reach = episode_cost(f, losses, costs, mu=1.0)
+    assert np.isclose(float(j), 0.7)
+    np.testing.assert_allclose(np.asarray(reach), [1.0, 0.0, 0.0])
+
+
+def test_episode_cost_always_defer():
+    """Full deferral pays every defer penalty plus the expert's loss."""
+    f = jnp.array([1.0, 1.0, 0.0])
+    losses = jnp.array([0.7, 0.5, 0.05])
+    costs = jnp.array([10.0, 100.0, 0.0])
+    j, reach = episode_cost(f, losses, costs, mu=0.01)
+    # level1: 0.01*10 ; level2: 0.01*100 ; level3: loss 0.05
+    assert np.isclose(float(j), 0.1 + 1.0 + 0.05)
+    np.testing.assert_allclose(np.asarray(reach), [1.0, 1.0, 1.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    f1=st.floats(0.0, 1.0), f2=st.floats(0.0, 1.0),
+    l1=st.floats(0.0, 5.0), l2=st.floats(0.0, 5.0), l3=st.floats(0.0, 5.0),
+    mu=st.floats(1e-4, 1.0),
+)
+def test_episode_cost_properties(f1, f2, l1, l2, l3, mu):
+    """J is within [0, sum of all possible penalties]; reach is a
+    decreasing survival probability."""
+    f = jnp.array([f1, f2, 0.0])
+    losses = jnp.array([l1, l2, l3])
+    costs = jnp.array([10.0, 100.0, 0.0])
+    j, reach = episode_cost(f, losses, costs, mu)
+    r = np.asarray(reach)
+    assert r[0] == 1.0 and r[1] <= r[0] + 1e-6 and r[2] <= r[1] + 1e-6
+    upper = mu * 110.0 + l1 + l2 + l3
+    assert -1e-6 <= float(j) <= upper + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Deferral MLP (Eq. 5)
+# ---------------------------------------------------------------------------
+def test_deferral_starts_open():
+    spec = DeferralSpec(n_classes=2)
+    params = deferral_init(jax.random.PRNGKey(0), spec)
+    probs = jnp.array([[0.9, 0.1], [0.5, 0.5]])
+    p = deferral_prob(params, probs)
+    assert bool(jnp.all(p > 0.5)), "gates must start open (paper §1)"
+
+
+def test_deferral_permutation_robust():
+    """Features are sorted probabilities: class order must not matter."""
+    spec = DeferralSpec(n_classes=3)
+    params = deferral_init(jax.random.PRNGKey(1), spec)
+    p1 = deferral_prob(params, jnp.array([[0.7, 0.2, 0.1]]))
+    p2 = deferral_prob(params, jnp.array([[0.1, 0.7, 0.2]]))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 driver
+# ---------------------------------------------------------------------------
+def _run(mu, n=400, hard_budget=None, dataset="imdb", seed=0):
+    stream = make_stream(dataset, seed=seed, n_samples=n)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
+                                 seed=seed)
+    if hard_budget is not None:
+        from dataclasses import replace
+        cfg = replace(cfg, hard_budget=hard_budget)
+    cas = OnlineCascade(cfg, expert)
+    metrics = cas.run(stream)
+    return cas, metrics, stream
+
+
+def test_cascade_outputs_valid_labels():
+    cas, m, stream = _run(mu=3e-7, n=300)
+    preds = m["predictions"]
+    assert preds.min() >= 0 and preds.max() < stream.spec.n_classes
+
+
+def test_cascade_initially_defers_everything():
+    """First queries go to the expert (beta=1 + open gates)."""
+    cas, m, _ = _run(mu=3e-7, n=60)
+    assert all(cas.history["expert_called"][:10])
+
+
+def test_hard_budget_respected():
+    cas, m, _ = _run(mu=1e-7, n=400, hard_budget=50)
+    assert m["expert_calls"] <= 50
+
+
+def test_beta_decays():
+    cas, m, _ = _run(mu=3e-7, n=200)
+    for lvl in cas.levels:
+        assert lvl.beta < 1e-2
+
+
+def test_mu_controls_budget_monotonically():
+    """Larger mu (costlier deferral) => fewer expert calls (paper §3:
+    'the user can change the cost weighting factor mu ... for adjusting
+    cost budgets')."""
+    _, m_hi, _ = _run(mu=1e-6, n=500)
+    _, m_lo, _ = _run(mu=1e-8, n=500)
+    assert m_hi["expert_calls"] <= m_lo["expert_calls"]
+
+
+def test_cache_fifo():
+    from repro.core.cascade import _Level, LevelSpec, CascadeConfig
+    cfg = default_cascade_config(n_classes=2)
+    lvl = _Level(cfg.levels[0], cfg, jax.random.PRNGKey(0))
+    for i in range(20):
+        lvl.cache_add(np.full((cfg.n_features,), i, np.float32), i % 2)
+    assert lvl.cache_n == lvl.spec.cache_size
+    # oldest entries were evicted: cache holds items 12..19
+    vals = sorted(set(float(x[0]) for x in lvl.cache_x))
+    assert min(vals) >= 20 - lvl.spec.cache_size
+
+
+def test_students_learn_from_expert_only():
+    """The cascade never touches ground-truth labels: accuracy vs the
+    EXPERT's labels must exceed accuracy expected by chance."""
+    cas, m, stream = _run(mu=1e-7, n=600)
+    preds = m["predictions"]
+    exp_labels = stream.expert_labels("gpt-3.5-turbo")
+    agree = float(np.mean(preds == exp_labels))
+    assert agree > 0.8
+
+
+def test_cost_accounting_consistent():
+    cas, m, stream = _run(mu=3e-7, n=300)
+    # total cost >= expert_calls * expert cost
+    assert m["total_cost_units"] >= m["expert_calls"] * cas.cfg.expert_cost
+    assert sum(cas.level_counts) == len(stream)

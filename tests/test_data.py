@@ -1,0 +1,83 @@
+"""Data pipeline tests: determinism, benchmark statistics, shifts."""
+import numpy as np
+import pytest
+
+from repro.data import BENCHMARKS, hash_bow, hash_ids, make_stream
+
+
+def test_deterministic():
+    s1 = make_stream("imdb", seed=3, n_samples=200)
+    s2 = make_stream("imdb", seed=3, n_samples=200)
+    assert np.array_equal(s1.labels, s2.labels)
+    assert all(np.array_equal(a, b) for a, b in zip(s1.docs, s2.docs))
+    e1 = s1.expert_labels("gpt-3.5-turbo")
+    e2 = s2.expert_labels("gpt-3.5-turbo")
+    assert np.array_equal(e1, e2)
+
+
+def test_sizes_and_classes_match_paper():
+    assert BENCHMARKS["imdb"].n_samples == 25_000
+    assert BENCHMARKS["hatespeech"].n_samples == 10_703
+    assert BENCHMARKS["isear"].n_samples == 7_666
+    assert BENCHMARKS["fever"].n_samples == 6_512
+    assert BENCHMARKS["isear"].n_classes == 7
+    assert BENCHMARKS["hatespeech"].n_classes == 2
+
+
+def test_hatespeech_imbalance():
+    """~1:7.95 hate:noHate ratio (paper §4)."""
+    s = make_stream("hatespeech", seed=0)
+    frac_pos = float(np.mean(s.labels == 1))
+    assert 0.09 < frac_pos < 0.14
+
+
+def test_expert_accuracy_matches_table1():
+    for name, spec in BENCHMARKS.items():
+        s = make_stream(name, seed=0)
+        for expert, acc in spec.expert_acc.items():
+            got = float(np.mean(s.expert_labels(expert) == s.labels))
+            assert abs(got - acc) < 0.02, (name, expert, got, acc)
+
+
+def test_expert_errors_biased_to_long_inputs():
+    """Paper Table 5: LLM accuracy drops with input length."""
+    s = make_stream("imdb", seed=0, n_samples=8000)
+    e = s.expert_labels("gpt-3.5-turbo")
+    correct = (e == s.labels)
+    med = np.median(s.lengths)
+    acc_short = float(np.mean(correct[s.lengths <= med]))
+    acc_long = float(np.mean(correct[s.lengths > med]))
+    assert acc_short > acc_long
+
+
+def test_length_shift_ordering():
+    s = make_stream("imdb", seed=0, n_samples=500, order="length")
+    assert np.all(np.diff(s.lengths) >= 0)
+
+
+def test_category_shift_ordering():
+    s = make_stream("imdb", seed=0, n_samples=600, order="category")
+    held = s.categories == s.categories.max()
+    first_held = int(np.argmax(held))
+    assert not held[:first_held].any()
+    assert held[first_held:].all()
+
+
+def test_features_shapes():
+    doc = np.arange(50)
+    f = hash_bow(doc, 2048)
+    assert f.shape == (2048,) and abs(float(np.linalg.norm(f)) - 1.0) < 1e-5
+    ids = hash_ids(doc, 4096, 128)
+    assert ids.shape == (128,)
+    assert ids[:50].min() >= 1 and ids[50:].max() == 0
+
+
+def test_bow_order_invariance_vs_ids_order_sensitivity():
+    """The LR featurizer must be order-blind; the TF featurizer must not —
+    this is the capability split the benchmarks rely on."""
+    rng = np.random.default_rng(0)
+    doc = rng.integers(0, 30000, 60)
+    perm = doc[::-1].copy()
+    assert np.allclose(hash_bow(doc, 512), hash_bow(perm, 512))
+    assert not np.array_equal(hash_ids(doc, 4096, 64),
+                              hash_ids(perm, 4096, 64))

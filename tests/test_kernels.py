@@ -1,0 +1,212 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (+ hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm import moe_expert_ffn, moe_gmm
+from repro.kernels.moe_gmm.ref import expert_ffn_ref, gmm_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Sq, H, K, hd, causal, window, dtype)
+    (2, 256, 8, 4, 64, True, None, jnp.float32),
+    (1, 512, 4, 4, 128, True, 128, jnp.float32),
+    (2, 128, 8, 2, 120, True, None, jnp.float32),   # danube head_dim
+    (1, 256, 4, 2, 64, False, None, jnp.float32),   # encoder (non-causal)
+    (1, 256, 8, 8, 64, True, 64, jnp.float32),      # MHA + tight window
+    (2, 128, 4, 2, 64, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_allclose(case):
+    B, S, H, K, hd, causal, window, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, S, K, hd), dtype)
+    v = _rand(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_kv=64)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal,
+                        window=window).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bkv=st.sampled_from([32, 64, 128]),
+    s=st.sampled_from([128, 256]),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+)
+def test_flash_attention_block_shape_invariance(bq, bkv, s, h, g):
+    """Property: output is independent of the VMEM tile decomposition."""
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    K = h
+    H = h * g
+    q = _rand(ks[0], (1, s, H, 64))
+    k = _rand(ks[1], (1, s, K, 64))
+    v = _rand(ks[2], (1, s, K, 64))
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bkv)
+    ref = flash_attention(q, k, v, causal=True, block_q=s, block_kv=s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+DECODE_CASES = [
+    (2, 256, 8, 4, 64, 100),
+    (1, 512, 4, 2, 128, 512),
+    (2, 128, 8, 8, 120, 64),
+    (4, 64, 4, 4, 64, 1),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_allclose(case):
+    B, W, H, K, hd, nvalid = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, 1, H, hd))
+    k = _rand(ks[1], (B, W, K, hd))
+    v = _rand(ks[2], (B, W, K, hd))
+    pos = jnp.where(jnp.arange(W) < nvalid, jnp.arange(W), -1)
+    out = decode_attention(q, k, v, pos, block_kv=64)
+    G = H // K
+    ref = decode_attention_ref(
+        q[:, 0].reshape(B, K, G, hd), k, v,
+        jnp.broadcast_to(pos[None], (B, W))).reshape(B, 1, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_semantics():
+    """Ring-buffer: result must only depend on valid slots."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, W, H, K, hd = 1, 64, 4, 4, 64
+    q = _rand(ks[0], (B, 1, H, hd))
+    k = _rand(ks[1], (B, W, K, hd))
+    v = _rand(ks[2], (B, W, K, hd))
+    pos = jnp.where(jnp.arange(W) < 10, jnp.arange(W), -1)
+    out1 = decode_attention(q, k, v, pos, block_kv=32)
+    # scramble the invalid region — output must not change
+    k2 = k.at[:, 10:].set(999.0)
+    v2 = v.at[:, 10:].set(-999.0)
+    out2 = decode_attention(q, k2, v2, pos, block_kv=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [
+    (4, 64, 256, 512), (8, 32, 128, 128), (2, 128, 512, 256)])
+def test_moe_gmm_allclose(shape):
+    E, C, D, F = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = _rand(ks[0], (E, C, D))
+    w = _rand(ks[1], (E, D, F), scale=0.05)
+    out = moe_gmm(x, w, block_c=32, block_f=64, block_d=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gmm_ref(x, w)),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_moe_expert_ffn_allclose():
+    E, C, D, F = 4, 64, 128, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = _rand(ks[0], (E, C, D))
+    w_in = _rand(ks[1], (E, D, F), scale=0.05)
+    w_g = _rand(ks[2], (E, D, F), scale=0.05)
+    w_o = _rand(ks[3], (E, F, D), scale=0.05)
+    out = moe_expert_ffn(x, w_in, w_g, w_o)
+    ref = expert_ffn_ref(x, w_in, w_g, w_o)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(e=st.sampled_from([2, 4]), c=st.sampled_from([16, 64]),
+       d=st.sampled_from([64, 128]), f=st.sampled_from([64, 256]))
+def test_moe_gmm_property(e, c, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = _rand(ks[0], (e, c, d))
+    w = _rand(ks[1], (e, d, f), scale=0.1)
+    out = moe_gmm(x, w, block_c=16, block_f=64, block_d=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gmm_ref(x, w)),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", [16, 32, 128])
+def test_ssd_scan_allclose(chunk):
+    Bsz, S, H, hp, N = 2, 128, 4, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = _rand(ks[0], (Bsz, S, H, hp))
+    dt = jax.nn.softplus(_rand(ks[1], (Bsz, S, H)))
+    adt = -0.5 * dt
+    B = _rand(ks[2], (Bsz, S, N))
+    C = _rand(ks[3], (Bsz, S, N))
+    out = ssd_scan(x, adt, dt, B, C, chunk=chunk)
+    ref = ssd_scan_ref(x, adt, dt, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_matches_model_path():
+    """Kernel == model-level jnp chunked path == sequential oracle."""
+    from repro.models.ssm import ssd_chunked
+    Bsz, S, H, hp, N = 1, 64, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = _rand(ks[0], (Bsz, S, H, hp))
+    dt = jax.nn.softplus(_rand(ks[1], (Bsz, S, H)))
+    adt = -0.3 * dt
+    B = _rand(ks[2], (Bsz, S, N))
+    C = _rand(ks[3], (Bsz, S, N))
+    y_kernel = ssd_scan(x, adt, dt, B, C, chunk=16)
+    y_model, _ = ssd_chunked(x, adt, dt, B, C, 16)
+    y_ref = ssd_scan_ref(x, adt, dt, B, C)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.sampled_from([32, 64]), h=st.sampled_from([1, 2]),
+       hp=st.sampled_from([16, 32]), n=st.sampled_from([8, 16]),
+       decay=st.floats(0.05, 2.0))
+def test_ssd_scan_property(s, h, hp, n, decay):
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    x = _rand(ks[0], (1, s, h, hp))
+    dt = jax.nn.softplus(_rand(ks[1], (1, s, h)))
+    adt = -decay * dt
+    B = _rand(ks[2], (1, s, n))
+    C = _rand(ks[3], (1, s, n))
+    out = ssd_scan(x, adt, dt, B, C, chunk=16)
+    ref = ssd_scan_ref(x, adt, dt, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-3, rtol=3e-3)

@@ -1,0 +1,160 @@
+"""Model substrate tests: attention paths, SWA ring buffer, MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import transformer as tf
+from repro.models.attention import (
+    causal_prefill_blocked, chunked_attention, prefill_attention,
+    swa_prefill_attention)
+from repro.models.moe import capacity_for, moe_ffn_local, route
+
+
+def _qkv(key, B, S, H, K, hd):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd)),
+            jax.random.normal(ks[1], (B, S, K, hd)),
+            jax.random.normal(ks[2], (B, S, K, hd)))
+
+
+def _ref(q, k, v, causal=True, window=None):
+    return attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=causal,
+                         window=window).transpose(0, 2, 1, 3)
+
+
+def test_chunked_attention_matches_naive():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 4, 2, 32)
+    pos = jnp.arange(128)
+    out = chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                            causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_ref(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_blocked_causal_prefill_matches_naive():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 256, 4, 4, 32)
+    out = causal_prefill_blocked(q, k, v, chunk_q=64, chunk_kv=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_ref(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_swa_banded_prefill_matches_naive():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 512, 4, 2, 32)
+    out = swa_prefill_attention(q, k, v, window=64, chunk=64)
+    ref = _ref(q, k, v, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([64, 128, 256]),
+       w=st.sampled_from([16, 32, 64]),
+       chunk=st.sampled_from([16, 32, 64]))
+def test_prefill_attention_window_property(s, w, chunk):
+    """Property: banded and full-mask SWA paths agree for any geometry."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, s, 2, 2, 16)
+    pos = jnp.arange(s)
+    full = chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                             causal=True, window=w, chunk=chunk)
+    ref = _ref(q, k, v, window=w)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_swa_ring_buffer_decode_equals_full_history():
+    """Ring-buffer SWA cache must reproduce windowed attention over the
+    full history: decode step T with cache W == naive attention over the
+    last W tokens."""
+    cfg = get_smoke_config("h2o-danube-3-4b")   # window 64
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    S = 128                                      # prompt = 2x window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S + 1), 0,
+                              cfg.vocab)
+    # path A: decode token S after prefilling S tokens (ring cache W=64)
+    last, cache = tf.prefill(params, {"tokens": toks[:, :S]}, cfg)
+    logits_dec, _ = tf.decode_step(params, cache, toks[:, S:S + 1],
+                                   jnp.int32(S), cfg)
+    # path B: teacher-forced full forward (banded masks, no ring buffer)
+    logits_full, _ = tf.forward(
+        params, {"tokens": toks, "targets": toks}, cfg)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, S]),
+                               rtol=6e-2, atol=6e-2)
+
+
+def test_moe_router_topk_normalized():
+    cfg = get_smoke_config("mixtral-8x22b")
+    params_key = jax.random.PRNGKey(0)
+    from repro.models.moe import init_moe
+    p = init_moe(params_key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    idx, w, aux = route(x, p["router"], cfg)
+    assert idx.shape == (32, cfg.moe.top_k)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, atol=1e-5)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_bounded():
+    """With capacity_factor -> large, gshard dispatch equals a dense
+    mixture over the selected experts."""
+    cfg = get_smoke_config("dbrx-132b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    from repro.models.moe import init_moe
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, cfg.d_model),
+                          jnp.float32) * 0.5
+    y, aux = moe_ffn_local(x, p, cfg)
+    # dense reference: run every expert, combine with routing weights
+    idx, w, _ = route(x, p["router"], cfg)
+    h = jnp.einsum("td,edf->tef", x, p["w_in"])
+    g = jnp.einsum("td,edf->tef", x, p["w_gate"])
+    out_all = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, p["w_out"])
+    ref = jnp.zeros_like(x)
+    for slot in range(cfg.moe.top_k):
+        sel = out_all[jnp.arange(16), idx[:, slot]]
+        ref = ref + w[:, slot:slot + 1] * sel
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_capacity_function():
+    cfg = get_smoke_config("mixtral-8x22b")
+    c = capacity_for(64, cfg)
+    assert c >= 64 * cfg.moe.top_k / cfg.moe.num_experts
+    assert c % 4 == 0
+
+
+def test_mamba_decode_matches_forward():
+    cfg = get_smoke_config("mamba2-370m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    S = 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S + 4), 0,
+                              cfg.vocab)
+    logits_full, _ = tf.forward(params, {"tokens": toks, "targets": toks},
+                                cfg)
+    last, cache = tf.prefill(params, {"tokens": toks[:, :S]}, cfg,
+                             cache_len=S + 4)
+    for t in range(S, S + 4):
+        logits_dec, cache = tf.decode_step(params, cache, toks[:, t:t + 1],
+                                           jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_full[:, t]),
+                                   rtol=6e-2, atol=6e-2)
+
+
+def test_vocab_padding_masked():
+    """Padded vocab columns must never win argmax."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab=500)   # padded to 512
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 500)
+    logits, _ = tf.forward(params, {"tokens": toks, "targets": toks}, cfg)
+    assert logits.shape[-1] == 512
+    assert int(jnp.max(jnp.argmax(logits, -1))) < 500

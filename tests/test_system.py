@@ -1,0 +1,118 @@
+"""End-to-end behaviour tests for the paper's system (Algorithm 1 at small
+scale, baselines, robustness, no-regret trend)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OnlineCascade, OnlineEnsemble, SimulatedExpert, default_cascade_config,
+    distill_students)
+from repro.data import make_stream
+
+N = 1000
+
+
+@pytest.fixture(scope="module")
+def imdb_run():
+    stream = make_stream("imdb", seed=0, n_samples=N)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    cfg = default_cascade_config(n_classes=2, mu=3e-7, seed=0)
+    cas = OnlineCascade(cfg, expert)
+    metrics = cas.run(stream)
+    return stream, expert, cas, metrics
+
+
+def test_cascade_saves_cost_with_usable_accuracy(imdb_run):
+    """The paper's headline: comparable accuracy at a fraction of the LLM
+    calls.  At this 1k-item stream the gates are still closing (the
+    paper's headline 70-90% savings shows at 2k+ items — see
+    benchmarks/case_analysis.py); require real savings and accuracy
+    within 15 points of the expert."""
+    stream, expert, cas, m = imdb_run
+    frac_calls = m["expert_calls"] / N
+    assert frac_calls < 0.85, f"no savings: {frac_calls}"
+    expert_acc = float(np.mean(
+        stream.expert_labels("gpt-3.5-turbo") == stream.labels))
+    assert m["accuracy"] > expert_acc - 0.15
+
+
+def test_accuracy_improves_over_stream(imdb_run):
+    """Students learn online: accuracy on the last third is well above
+    chance (the first third is DAgger-dominated)."""
+    stream, _, cas, m = imdb_run
+    preds = m["predictions"]
+    labels = stream.labels
+    third = N // 3
+    acc_late = float(np.mean(preds[2 * third:] == labels[2 * third:]))
+    assert acc_late > 0.6
+
+
+def test_later_stream_handled_by_students(imdb_run):
+    """Fig 5: over time the majority of queries shift to cheap levels."""
+    stream, _, cas, m = imdb_run
+    lv = np.array(cas.history["level"])
+    n_levels = len(cas.levels)
+    early_expert = float(np.mean(lv[:100] == n_levels))
+    late_expert = float(np.mean(lv[-300:] == n_levels))
+    assert early_expert > 0.9
+    assert late_expert < early_expert
+
+
+def test_cascade_beats_ensemble_ablation():
+    """S5.1/S5.2: deferral-policy learning beats the fixed-probability
+    ensemble at a matched annotation budget."""
+    stream = make_stream("imdb", seed=1, n_samples=N)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    cfg = default_cascade_config(n_classes=2, mu=3e-7, seed=1)
+    cas = OnlineCascade(cfg, expert)
+    m_cas = cas.run(stream)
+
+    expert2 = SimulatedExpert(stream, "gpt-3.5-turbo")
+    ens = OnlineEnsemble(cfg, expert2, expert_prob_decay=0.995)
+    m_ens = ens.run(stream, hard_budget=max(m_cas["expert_calls"], 1))
+    # cascade must be at least as accurate (small tolerance for noise)
+    assert m_cas["accuracy"] >= m_ens["accuracy"] - 0.03
+
+
+def test_distillation_baseline_runs():
+    stream = make_stream("fever", seed=0, n_samples=800)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    res = distill_students(stream, expert, budget_n=300, epochs=3)
+    assert 0.3 < res["lr"]["accuracy"] < 1.0
+    assert 0.3 < res["tinytf"]["accuracy"] < 1.0
+
+
+def test_robust_to_length_shift():
+    """Table 2: accuracy under length-ascending order stays within a few
+    points of the default order."""
+    accs = {}
+    for order in ("default", "length"):
+        stream = make_stream("imdb", seed=2, n_samples=N, order=order)
+        expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+        cfg = default_cascade_config(n_classes=2, mu=2e-7, seed=2)
+        cas = OnlineCascade(cfg, expert)
+        accs[order] = cas.run(stream)["accuracy"]
+    assert abs(accs["default"] - accs["length"]) < 0.08
+
+
+def test_average_regret_decreases():
+    """Thm 3.2 (empirical): average per-episode cost J/t trends down as
+    the policy converges."""
+    stream = make_stream("imdb", seed=3, n_samples=N)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    cfg = default_cascade_config(n_classes=2, mu=3e-7, seed=3)
+    cas = OnlineCascade(cfg, expert)
+    cas.run(stream)
+    J = np.array(cas.history["J"])
+    avg_early = float(np.mean(J[:N // 4]))
+    avg_late = float(np.mean(J[-N // 4:]))
+    assert avg_late < avg_early
+
+
+def test_multiclass_isear():
+    stream = make_stream("isear", seed=0, n_samples=800)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    cfg = default_cascade_config(n_classes=7, mu=2e-7, seed=0)
+    cas = OnlineCascade(cfg, expert)
+    m = cas.run(stream)
+    assert m["accuracy"] > 1.0 / 7 + 0.1     # well above chance
+    assert m["expert_calls"] <= 800
