@@ -24,9 +24,10 @@ def main() -> None:
                     help="benchmark names to skip")
     args = ap.parse_args()
 
-    from benchmarks import (case_analysis, cost_equilibrium,
-                            distribution_shift, prefill_cost, regret,
-                            roofline_report, table1, tradeoff_curves)
+    from benchmarks import (batched_throughput, case_analysis,
+                            cost_equilibrium, distribution_shift,
+                            prefill_cost, regret, roofline_report, table1,
+                            tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -35,6 +36,13 @@ def main() -> None:
     def record(name, t0, derived):
         us = (time.time() - t0) * 1e6
         csv.append(f"{name},{us:.0f},{derived}")
+
+    if "batched" not in args.skip:
+        t0 = time.time()
+        bt = batched_throughput.run(samples=min(n, 512), seed=args.seed,
+                                    batches=(64,), quick=quick)
+        record("batched_throughput", t0,
+               f"batch64_speedup={bt['headline_speedup']:.1f}x")
 
     if "table1" not in args.skip:
         t0 = time.time()

@@ -4,6 +4,7 @@ from repro.core.deferral import (
     DeferralSpec, deferral_init, deferral_prob)
 from repro.core.cascade import (
     LevelSpec, CascadeConfig, OnlineCascade, default_cascade_config)
+from repro.core.batched import BatchedCascadeEngine
 from repro.core.experts import SimulatedExpert, ModelExpert
 from repro.core.ensemble import OnlineEnsemble
 from repro.core.distill import distill_students
@@ -12,5 +13,6 @@ __all__ = [
     "episode_cost", "policy_value",
     "DeferralSpec", "deferral_init", "deferral_prob",
     "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
+    "BatchedCascadeEngine",
     "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",
 ]

@@ -1,0 +1,466 @@
+"""Batched multi-stream cascade engine (the serving-scale form of Alg. 1).
+
+``OnlineCascade.process`` is a host-side Python loop: one tiny jitted call
+per level per item, plus four more per expert-labeled item for the student
+and deferral updates.  At serving scale that is dispatch-bound, not
+FLOP-bound.  ``BatchedCascadeEngine`` runs S concurrent stream lanes in
+lockstep and replaces the per-item walk with two fused, jitted calls per
+tick:
+
+  route pass (read-only, one jitted call per *level*, not per item)
+    * the cascade walk is vectorized: per-item control flow becomes
+      boolean lane masks (jumped / alive / took) combined with
+      ``where``/``argmax`` logic instead of Python ``break``s;
+    * each level's predict + defer runs once, batched over the gathered
+      subset of lanes still alive at that level — dead lanes (already
+      exited, or DAgger-jumped straight to the expert) cost nothing,
+      preserving the cascade's compute savings that a naive
+      all-levels-times-all-lanes batch would squander.  Subsets are
+      padded to bucketed sizes (powers of two up to S) so the number of
+      compiled shapes stays bounded;
+    * the student models and deferral MLPs are natively batched — this is
+      the ``vmap`` of the reference's per-example functions collapsed
+      into one dot per level.
+
+  expert call
+    * the deferred subset is gathered once and sent to the expert as a
+      single batched forward (``label_batch``).
+
+  update pass (per tick, not per item)
+    * expert demonstrations are scattered into a vectorized ring buffer
+      per level (the FIFO cache of the reference, as one masked scatter
+      in a jitted step with ``donate_argnums`` so the buffers mutate in
+      place instead of copying);
+    * one weighted student OGD/Adam step per level per tick, sampled from
+      the post-insert ring buffer;
+    * one weighted deferral-MLP step per level per tick, with per-item
+      weights w[s] = 1[expert labeled s and s reached this level], and
+      skipped entirely when no lane has mass — exactly when the reference
+      would not step.
+
+    The update steps are the *same jitted callables* the reference uses
+    (they are batched and weighted by design), invoked once per tick with
+    the whole lane batch instead of once per item.  Reusing the identical
+    compiled program — rather than re-fusing the update math into one
+    mega-graph — is what makes the S == 1 state evolution bit-identical
+    instead of merely close (XLA re-fusion reassociates reductions at the
+    ~1 ulp level).
+
+RNG / equivalence contract
+--------------------------
+All randomness follows the pre-split per-tick key discipline of
+``repro.core.rng``: lane s at tick t draws from independent child
+generators of ``SeedSequence((seed, s, t))``; cache mini-batch sampling
+uses the lane-0 children (it is a per-cascade purpose).  The sequential
+``OnlineCascade`` is lane 0 of this scheme, and all floating-point update
+math lives in functions shared verbatim with the reference
+(``*_loss_weighted``, ``deferral_update_terms``), computed in float32 on
+device by both engines.  Consequence: **with n_streams == 1 this engine
+is bit-for-bit equivalent to ``OnlineCascade`` on the same stream and
+seed** — identical predictions, chosen levels, expert calls, parameters,
+and optimizer state (tests/test_batched.py asserts this exactly).
+
+Deviations at S > 1 (documented, inherent to batching):
+  * students/deferral MLPs take ONE weighted step per tick instead of one
+    step per expert-labeled item — k demonstrations within a tick are
+    aggregated, which is how batch-serving cascades amortize update cost
+    (cf. cascade-aware training; PAPERS.md);
+  * DAgger's beta decays per consumed item (``decay ** S`` per tick, all
+    lanes sharing one beta): the students are shared, so the exploration
+    budget tracks demonstrations seen, not wall-clock ticks;
+  * the hard expert budget is enforced at tick granularity: the first
+    ``remaining`` deferred lanes (in lane order) get the expert, the rest
+    fall back to the last student's prediction;
+  * expert annotations land in the shared ring buffer in lane order
+    within the tick.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import CascadeConfig, _Level
+from repro.core.deferral import deferral_prob
+from repro.core.rng import sample_cache_indices, tick_rngs
+
+
+class BatchedCascadeEngine:
+    """Lockstep multi-stream driver for Algorithm 1.
+
+    ``process_tick(indices, docs)`` advances every lane by one item; lane
+    s of tick t handles ``docs[s]`` (its expert annotation is requested as
+    ``expert.label(indices[s], docs[s])`` or the batched equivalent).
+    """
+
+    def __init__(self, config: CascadeConfig, expert, n_streams: int = 64):
+        if n_streams < 1:
+            raise ValueError("n_streams must be >= 1")
+        self.cfg = config
+        self.expert = expert
+        self.n_streams = n_streams
+        keys = jax.random.split(jax.random.PRNGKey(config.seed),
+                                len(config.levels))
+        # identical construction (and PRNG keys) to OnlineCascade so the
+        # initial parameters match the reference bitwise
+        self.levels: List[_Level] = [
+            _Level(spec, config, k,
+                   defer_cost=(config.levels[i + 1].cost
+                               if i + 1 < len(config.levels)
+                               else config.expert_cost))
+            for i, (spec, k) in enumerate(zip(config.levels, keys))]
+        nlev = len(self.levels)
+        # vectorized ring buffers (device) + host mirrors of fill/ptr
+        self._cache_x = [jnp.asarray(lvl.cache_x) for lvl in self.levels]
+        self._cache_y = [jnp.asarray(lvl.cache_y) for lvl in self.levels]
+        self._cache_n = [0] * nlev
+        self._cache_ptr = [0] * nlev
+        self.t = 0
+        # per-stream accounting (independent per lane)
+        S = n_streams
+        self.expert_calls = np.zeros(S, np.int64)
+        self.total_cost = np.zeros(S, np.float64)
+        self.level_counts = np.zeros((S, nlev + 1), np.int64)
+        self.items_seen = np.zeros(S, np.int64)
+        self.J_cum = np.zeros(S, np.float64)
+        self.history: Dict[str, list] = {
+            "level": [], "pred": [], "expert_called": [], "cost": [],
+            "J": [],
+        }
+        self._build_steps()
+
+    def reset(self):
+        """Back to tick 0 of a fresh stream; compiled jits are kept (a
+        warmed engine can serve new streams with zero compile cost)."""
+        for lvl in self.levels:
+            lvl.reset()
+        nlev = len(self.levels)
+        # device ring buffers may have been donated — rebuild from the
+        # levels' (zeroed) host templates
+        self._cache_x = [jnp.asarray(lvl.cache_x) for lvl in self.levels]
+        self._cache_y = [jnp.asarray(lvl.cache_y) for lvl in self.levels]
+        self._cache_n = [0] * nlev
+        self._cache_ptr = [0] * nlev
+        self.t = 0
+        self.expert_calls[:] = 0
+        self.total_cost[:] = 0
+        self.level_counts[:] = 0
+        self.items_seen[:] = 0
+        self.J_cum[:] = 0
+        for v in self.history.values():
+            v.clear()
+
+    # -- aggregates -----------------------------------------------------
+    @property
+    def expert_calls_total(self) -> int:
+        return int(self.expert_calls.sum())
+
+    def _budget_exhausted(self) -> bool:
+        hb = self.cfg.hard_budget
+        return hb is not None and self.expert_calls_total >= hb
+
+    # -- jitted steps ----------------------------------------------------
+    def _build_steps(self):
+        levels = self.levels
+        nlev = len(levels)
+        bs_list = [min(lvl.spec.batch_size, lvl.spec.cache_size)
+                   for lvl in levels]
+
+        # per-level batched predict + defer over the gathered alive
+        # subset; at a (1, ...) batch this is the reference's
+        # ``predict_and_defer`` computation exactly
+        def make_predict_defer(lvl):
+            def predict_defer(params, dparams, xb):
+                probs = lvl._predict_batch(params, xb)
+                return probs, deferral_prob(dparams, probs)
+            return jax.jit(predict_defer)
+
+        self._predict_defer = [make_predict_defer(lvl) for lvl in levels]
+
+        def scatter(cx_t, cy_t, feats_t, y_full, called, ptr_arr):
+            """Vectorized ring-buffer insert of a tick's demonstrations."""
+            order = jnp.cumsum(called.astype(jnp.int32)) - 1
+            k = jnp.sum(called.astype(jnp.int32))
+            new_cx, new_cy = [], []
+            for i in range(nlev):
+                size = levels[i].spec.cache_size
+                # called lanes take consecutive slots after ptr; if
+                # k > size only the last `size` survive (the sequential
+                # FIFO's overwrite order); index `size` drops the write
+                keep = called & (order >= k - size)
+                slot = jnp.where(keep, (ptr_arr[i] + order) % size, size)
+                new_cx.append(cx_t[i].at[slot].set(feats_t[i], mode="drop"))
+                new_cy.append(cy_t[i].at[slot].set(y_full, mode="drop"))
+            return tuple(new_cx), tuple(new_cy)
+
+        self._scatter = jax.jit(scatter, donate_argnums=(0, 1))
+        self._bs_list = bs_list
+
+    def _bucket(self, n: int) -> int:
+        """Smallest padded batch size for a subset of n lanes: powers of
+        two (min 8) capped at n_streams, so each level compiles O(log S)
+        shapes.  With n_streams == 1 this is exactly 1 — the reference's
+        per-item shape, which keeps the parity contract bitwise."""
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.n_streams)
+
+    # -- expert ---------------------------------------------------------
+    def _expert_label_batch(self, idxs: Sequence[int], docs) -> np.ndarray:
+        lb = getattr(self.expert, "label_batch", None)
+        if lb is not None:
+            return np.asarray(lb(idxs, docs), np.int32)
+        return np.asarray([self.expert.label(i, d)
+                           for i, d in zip(idxs, docs)], np.int32)
+
+    # -- one lockstep tick ----------------------------------------------
+    def process_tick(self, indices: Sequence[int], docs) -> dict:
+        """Advance every lane by one item.  len(docs) may be < n_streams
+        on the final partial tick of a stream."""
+        cfg = self.cfg
+        nlev = len(self.levels)
+        S = len(docs)
+        if S > self.n_streams:
+            raise ValueError(f"tick of {S} items > n_streams={self.n_streams}")
+        self.t += 1
+        t = self.t
+
+        # lazy per-level featurization: a level's feature batch is only
+        # built if some lane actually reaches it (mirrors the reference's
+        # per-item feat() cache; in a cheap-level-dominant steady state
+        # the expensive levels' featurizers never run)
+        feats_cache: list = [None] * nlev
+
+        def feats(i):
+            if feats_cache[i] is None:
+                feats_cache[i] = np.stack(
+                    [self.levels[i].featurize(d) for d in docs])
+            return feats_cache[i]
+
+        u_jump = np.empty((nlev, S))
+        u_act = np.empty((nlev, S), np.float32)
+        cache_rngs = None
+        for s in range(S):
+            r = tick_rngs(cfg.seed, s, t, nlev)
+            u_jump[:, s] = r.jump.random(nlev)
+            u_act[:, s] = r.action.random(nlev).astype(np.float32)
+            if s == 0:
+                cache_rngs = r.cache
+
+        budget_ok = not self._budget_exhausted()
+        betas = np.array([lvl.beta for lvl in self.levels])[:, None]
+        jump = (u_jump < betas) & budget_ok
+
+        # -- vectorized cascade walk: one gathered, batched predict+defer
+        #    call per level over the lanes still alive there --------------
+        alive = np.ones(S, bool)            # walking, not yet exited
+        jumped = np.zeros(S, bool)
+        eval_mask = np.zeros((nlev, S), bool)
+        dprob_h = np.zeros((nlev, S), np.float32)
+        predictions = np.zeros(S, np.int64)
+        exit_level = np.full(S, nlev, np.int64)   # nlev = reached expert
+        sub_sel: list = [None] * nlev       # lanes evaluated per level
+        sub_probs: list = [None] * nlev     # device (B, C) per level
+        for i, lvl in enumerate(self.levels):
+            jump_now = alive & jump[i]
+            jumped |= jump_now
+            alive &= ~jump[i]
+            sel = np.flatnonzero(alive)
+            if sel.size == 0:
+                continue
+            B = self._bucket(sel.size)
+            fi = feats(i)
+            xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
+            xb[:sel.size] = fi[sel]
+            probs_d, dprob_d = self._predict_defer[i](
+                lvl.params, lvl.dparams, jnp.asarray(xb))
+            sub_sel[i] = sel
+            sub_probs[i] = probs_d
+            probs_np = np.asarray(probs_d)[:sel.size]
+            dprob_np = np.asarray(dprob_d)[:sel.size]
+            eval_mask[i, sel] = True
+            dprob_h[i, sel] = dprob_np
+            if cfg.sample_actions:
+                defer_np = u_act[i, sel] < dprob_np
+            else:
+                defer_np = dprob_np > 0.5
+            if not budget_ok and i == nlev - 1:
+                defer_np[:] = False     # budget gate: cannot reach expert
+            take = sel[~defer_np]
+            predictions[take] = np.argmax(probs_np[~defer_np], axis=-1)
+            exit_level[take] = i
+            alive[take] = False
+
+        want = jumped | alive               # deferred past the last level
+        level_costs = np.array([lvl.spec.cost for lvl in self.levels])
+        cost_h = eval_mask.T @ level_costs  # sum of evaluated level costs
+
+        # hard budget at tick granularity: first `remaining` lanes win
+        called = want.copy()
+        hb = cfg.hard_budget
+        if hb is not None:
+            remaining = max(hb - self.expert_calls_total, 0)
+            if int(called.sum()) > remaining:
+                idx_want = np.flatnonzero(called)
+                called[idx_want[remaining:]] = False
+        overflow = want & ~called
+
+        y_full = np.zeros(S, np.int32)
+        if called.any():
+            sel = np.flatnonzero(called)
+            y_full[sel] = self._expert_label_batch(
+                [int(indices[s]) for s in sel], [docs[s] for s in sel])
+            predictions[sel] = y_full[sel]
+        for s in np.flatnonzero(overflow):
+            # budget overflow: fall back to the last student, like the
+            # reference's exhausted-budget path (rare; never at S == 1).
+            # Matching the reference's quirk, the fallback forward is not
+            # costed and the lane is counted as a last-level exit even if
+            # it jumped earlier
+            lvl = self.levels[-1]
+            probs = np.asarray(lvl._predict(
+                lvl.params, jnp.asarray(feats(nlev - 1)[s])))
+            predictions[s] = int(np.argmax(probs))
+
+        levels_out = np.where(called, nlev,
+                              np.where(overflow, nlev - 1, exit_level))
+        cost_out = cost_h + np.where(called, cfg.expert_cost, 0.0)
+
+        if called.any():
+            # host mirrors first: sampling sees the post-insert fill level
+            k = int(called.sum())
+            ptr_pre = np.asarray(self._cache_ptr, np.int32)
+            idx_t = []
+            for i, lvl in enumerate(self.levels):
+                size = lvl.spec.cache_size
+                self._cache_n[i] = min(self._cache_n[i] + k, size)
+                self._cache_ptr[i] = (self._cache_ptr[i] + k) % size
+                idx_t.append(jnp.asarray(sample_cache_indices(
+                    cache_rngs[i], self._cache_n[i],
+                    self._bs_list[i]).astype(np.int32)))
+            # the scatter only reads the called lanes' rows (others are
+            # dropped), so for levels the route never featurized, hash
+            # just those k docs instead of all S
+            def scatter_feats(i):
+                if feats_cache[i] is not None:
+                    return feats_cache[i]
+                lvl = self.levels[i]
+                arr = np.zeros((S,) + lvl.cache_x.shape[1:],
+                               lvl.cache_x.dtype)
+                for s in np.flatnonzero(called):
+                    arr[s] = lvl.featurize(docs[s])
+                return arr
+
+            new_cx, new_cy = self._scatter(
+                tuple(self._cache_x), tuple(self._cache_y),
+                tuple(jnp.asarray(scatter_feats(i)) for i in range(nlev)),
+                jnp.asarray(y_full), jnp.asarray(called),
+                jnp.asarray(ptr_pre))
+            self._cache_x = list(new_cx)
+            self._cache_y = list(new_cy)
+            # batched, per-item-weighted updates through the SAME jitted
+            # step callables as the sequential reference (bit-identical
+            # state evolution; see module docstring)
+            # reach[l] = prod_{k<l} dprob[k], float32 left fold like the
+            # reference's running product
+            reach = np.ones((nlev, S), np.float32)
+            for i in range(1, nlev):
+                reach[i] = reach[i - 1] * dprob_h[i - 1]
+            for i, lvl in enumerate(self.levels):
+                xb = self._cache_x[i][idx_t[i]]
+                yb = self._cache_y[i][idx_t[i]]
+                w = jnp.ones((self._bs_list[i],), jnp.float32)
+                lvl.params, lvl.opt_state = lvl._student_step(
+                    lvl.params, lvl.opt_state, xb, yb, w)
+                sel = sub_sel[i]
+                wz = called & eval_mask[i]
+                if sel is None or not wz.any():
+                    continue
+                B = sub_probs[i].shape[0]
+                y_sub = np.zeros(B, np.int32)
+                y_sub[:sel.size] = y_full[sel]
+                reach_sub = np.zeros(B, np.float32)
+                reach_sub[:sel.size] = reach[i, sel]
+                w_sub = np.zeros(B, np.float32)
+                w_sub[:sel.size] = wz[sel].astype(np.float32)
+                lvl.dparams, lvl.dopt_state = lvl._deferral_step(
+                    lvl.dparams, lvl.dopt_state, sub_probs[i],
+                    jnp.asarray(y_sub), jnp.asarray(reach_sub),
+                    jnp.asarray(w_sub))
+
+        # beta decays per consumed ITEM (decay^S per tick): the students
+        # are shared across lanes, so the DAgger exploration budget is
+        # measured in demonstrations seen, matching the reference's
+        # schedule in item-space (identical at S == 1)
+        for lvl in self.levels:
+            lvl.beta *= lvl.spec.beta_decay ** S
+
+        # per-stream accounting
+        lanes = np.arange(S)
+        J_t = cfg.mu * cost_out
+        self.expert_calls[lanes] += called.astype(np.int64)
+        self.total_cost[lanes] += cost_out
+        self.level_counts[lanes, levels_out] += 1
+        self.items_seen[lanes] += 1
+        self.J_cum[lanes] += J_t
+        self.history["level"].append(levels_out.copy())
+        self.history["pred"].append(predictions.astype(np.int64))
+        self.history["expert_called"].append(called.copy())
+        self.history["cost"].append(cost_out.copy())
+        self.history["J"].append(J_t.copy())
+        return {
+            "predictions": predictions.astype(np.int64),
+            "levels": levels_out,
+            "expert_called": called,
+            "cost_units": cost_out,
+            "expert_labels": np.where(called, y_full, -1),
+        }
+
+    # -- per-stream metrics ---------------------------------------------
+    def stream_metrics(self) -> dict:
+        """Independent per-lane accounting (S rows each)."""
+        seen = np.maximum(self.items_seen, 1)[:, None]
+        return {
+            "expert_calls": self.expert_calls.copy(),
+            "items_seen": self.items_seen.copy(),
+            "level_fractions": self.level_counts / seen,
+            "total_cost_units": self.total_cost.copy(),
+            "J_cum": self.J_cum.copy(),
+        }
+
+    # -- conveniences ----------------------------------------------------
+    def run(self, stream, log_every: int = 0) -> dict:
+        """Serve an entire stream, tick-major: tick T covers items
+        [T*S, T*S + S) with lane s = offset.  Returns OnlineCascade-style
+        summary metrics plus throughput and per-stream accounting."""
+        S = self.n_streams
+        n = len(stream)
+        preds = np.zeros(n, np.int32)
+        t0 = time.time()
+        for start in range(0, n, S):
+            stop = min(start + S, n)
+            idxs = list(range(start, stop))
+            out = self.process_tick(idxs, [stream.docs[i] for i in idxs])
+            preds[start:stop] = out["predictions"]
+            if log_every and (stop // log_every) > (start // log_every):
+                acc = float(np.mean(preds[:stop] == stream.labels[:stop]))
+                print(f"[{stop}/{n}] acc={acc:.4f} "
+                      f"expert_calls={self.expert_calls_total}")
+        dt = time.time() - t0
+        labels = stream.labels
+        acc = float(np.mean(preds == labels))
+        metrics = {
+            "accuracy": acc,
+            "expert_calls": self.expert_calls_total,
+            "total_cost_units": float(self.total_cost.sum()),
+            "level_fractions": (self.level_counts.sum(axis=0)
+                                / max(n, 1)).tolist(),
+            "predictions": preds,
+            "items_per_sec": n / max(dt, 1e-9),
+            "per_stream": self.stream_metrics(),
+        }
+        return metrics

@@ -29,12 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deferral import (
-    DeferralSpec, deferral_grads, deferral_init, deferral_prob)
+    DeferralSpec, deferral_grads_weighted, deferral_init,
+    deferral_prob, deferral_update_terms)
 from repro.core.experts import ModelExpert, SimulatedExpert
+from repro.core.rng import sample_cache_indices, tick_rngs
 from repro.data.features import hash_bow, hash_ids
 from repro.models.students import (
-    LRSpec, TinyTFSpec, lr_init, lr_loss, lr_predict,
-    tinytf_init, tinytf_loss, tinytf_predict)
+    LRSpec, TinyTFSpec, lr_init, lr_loss_weighted, lr_predict,
+    tinytf_init, tinytf_loss_weighted, tinytf_predict)
 from repro.optim import adam, ogd_sqrt_t
 
 
@@ -92,9 +94,13 @@ def default_cascade_config(n_classes: int, mu: float = 2e-6,
 class _Level:
     """Runtime state for one cascade level (student + deferral + cache)."""
 
-    def __init__(self, spec: LevelSpec, cfg: CascadeConfig, key):
+    def __init__(self, spec: LevelSpec, cfg: CascadeConfig, key,
+                 defer_cost: Optional[float] = None):
         self.spec = spec
         self.cfg = cfg
+        # mu * c_{i+1}: the penalty this level pays per deferral (Eq. 1).
+        self.mu_defer_cost = cfg.mu * (cfg.expert_cost if defer_cost is None
+                                       else defer_cost)
         k1, k2 = jax.random.split(key)
         C = cfg.n_classes
         if spec.kind == "lr":
@@ -134,7 +140,23 @@ class _Level:
         self.cache_y = np.zeros((spec.cache_size,), np.int32)
         self.cache_n = 0
         self.cache_ptr = 0
+        # immutable initial state, for reset() (jax arrays are immutable,
+        # so keeping the references is enough)
+        self._init_state = (self.params, self.opt_state,
+                            self.dparams, self.dopt_state)
         self._build_jits()
+
+    def reset(self):
+        """Restore the freshly-initialized state, keeping compiled jits —
+        lets a warmed engine be reused across streams (and benchmarks
+        measure the algorithm, not XLA compilation)."""
+        (self.params, self.opt_state,
+         self.dparams, self.dopt_state) = self._init_state
+        self.beta = self.cfg.beta0
+        self.cache_x[:] = 0
+        self.cache_y[:] = 0
+        self.cache_n = 0
+        self.cache_ptr = 0
 
     def _build_jits(self):
         spec, sspec, opt, dopt = self.spec, self.sspec, self.opt, self.dopt
@@ -143,38 +165,34 @@ class _Level:
             def predict(params, x):
                 return lr_predict(params, x[None])[0]
 
-            def student_step(params, opt_state, xb, yb, w):
-                def loss_fn(p):
-                    logits = xb @ p["w"] + p["b"]
-                    logz = jax.nn.logsumexp(logits, axis=-1)
-                    gold = jnp.take_along_axis(
-                        logits, yb[:, None], axis=-1)[:, 0]
-                    return jnp.sum((logz - gold) * w) / jnp.maximum(
-                        jnp.sum(w), 1.0)
-                grads = jax.grad(loss_fn)(params)
-                return opt.step(params, grads, opt_state)
+            def student_loss(p, xb, yb, w):
+                return lr_loss_weighted(p, xb, yb, w)
         else:
             def predict(params, x):
                 return tinytf_predict(params, x[None], sspec)[0]
 
-            def student_step(params, opt_state, xb, yb, w):
-                def loss_fn(p):
-                    from repro.models.students import tinytf_logits
-                    logits = tinytf_logits(p, xb, sspec)
-                    logz = jax.nn.logsumexp(logits, axis=-1)
-                    gold = jnp.take_along_axis(
-                        logits, yb[:, None], axis=-1)[:, 0]
-                    return jnp.sum((logz - gold) * w) / jnp.maximum(
-                        jnp.sum(w), 1.0)
-                grads = jax.grad(loss_fn)(params)
-                return opt.step(params, grads, opt_state)
+            def student_loss(p, xb, yb, w):
+                return tinytf_loss_weighted(p, xb, yb, w, sspec)
+
+        def student_step(params, opt_state, xb, yb, w):
+            grads = jax.grad(student_loss)(params, xb, yb, w)
+            return opt.step(params, grads, opt_state)
 
         cf = spec.calibration_factor
+        mu_dc = self.mu_defer_cost
 
-        def deferral_step(dparams, dstate, probs, z, reach, mcl):
-            grads = deferral_grads(dparams, probs[None], z[None],
-                                   reach[None], mcl[None], cf)
+        def deferral_step(dparams, dstate, probs, y, reach, w):
+            """probs: (B, C); y: (B,) expert labels; reach, w: (B,).
+            z and mu*c - L are derived in-graph (deferral_update_terms) so
+            the batched engine's weighted update is bit-identical."""
+            z, mcl = deferral_update_terms(probs, y, mu_dc)
+            grads = deferral_grads_weighted(dparams, probs, z, reach, mcl,
+                                            w, cf)
             return dopt.step(dparams, grads, dstate)
+
+        self._predict_batch = (
+            (lambda p, xb: lr_predict(p, xb)) if spec.kind == "lr"
+            else (lambda p, xb: tinytf_predict(p, xb, sspec)))
 
         def predict_and_defer(params, dparams, x):
             probs = predict(params, x)
@@ -198,9 +216,7 @@ class _Level:
         if self.cache_n == 0:
             return
         bs = min(self.spec.batch_size, self.spec.cache_size)
-        idx = rng.integers(0, self.cache_n, size=bs) \
-            if self.cache_n < bs else \
-            rng.choice(self.cache_n, size=bs, replace=False)
+        idx = sample_cache_indices(rng, self.cache_n, bs)
         xb = jnp.asarray(self.cache_x[idx])
         yb = jnp.asarray(self.cache_y[idx])
         w = jnp.ones((bs,), jnp.float32)
@@ -222,8 +238,14 @@ class OnlineCascade:
         keys = jax.random.split(jax.random.PRNGKey(config.seed),
                                 len(config.levels))
         self.levels: List[_Level] = [
-            _Level(spec, config, k) for spec, k in zip(config.levels, keys)]
-        self.rng = np.random.default_rng(config.seed + 1)
+            _Level(spec, config, k,
+                   defer_cost=(config.levels[i + 1].cost
+                               if i + 1 < len(config.levels)
+                               else config.expert_cost))
+            for i, (spec, k) in enumerate(zip(config.levels, keys))]
+        # Lane id in the shared per-tick RNG discipline (core.rng): the
+        # sequential reference is lane 0 of a batched engine.
+        self.stream_id = 0
         self.t = 0
         # accounting
         self.expert_calls = 0
@@ -234,6 +256,18 @@ class OnlineCascade:
             "level": [], "pred": [], "expert_called": [], "cost": [],
             "J": [],
         }
+
+    def reset(self):
+        """Back to item 0 of a fresh stream; compiled jits are kept."""
+        for lvl in self.levels:
+            lvl.reset()
+        self.t = 0
+        self.expert_calls = 0
+        self.total_cost = 0.0
+        self.level_counts[:] = 0
+        self.J_cum = 0.0
+        for v in self.history.values():
+            v.clear()
 
     # -- cost of deferring FROM level i (to i+1) -----------------------
     def _defer_cost(self, i: int) -> float:
@@ -249,6 +283,10 @@ class OnlineCascade:
         """Run one episode of the MDP; returns prediction + diagnostics."""
         cfg = self.cfg
         self.t += 1
+        n_levels = len(self.levels)
+        rngs = tick_rngs(cfg.seed, self.stream_id, self.t, n_levels)
+        u_jump = rngs.jump.random(n_levels)
+        u_act = rngs.action.random(n_levels) if cfg.sample_actions else None
         feat_cache: Dict[int, np.ndarray] = {}
 
         def feat(i):
@@ -264,8 +302,7 @@ class OnlineCascade:
 
         for i, lvl in enumerate(self.levels):
             # DAgger jump: at probability beta_i, query the expert directly.
-            if (not self._budget_exhausted()
-                    and self.rng.random() < lvl.beta):
+            if not self._budget_exhausted() and u_jump[i] < lvl.beta:
                 chosen_level = len(self.levels)
                 expert_called = True
                 break
@@ -278,7 +315,9 @@ class OnlineCascade:
             dprob_list.append(dprob)
             episode_cost_units += lvl.spec.cost
             if cfg.sample_actions:
-                defer = self.rng.random() < dprob
+                # compare at float32 like the batched engine's in-graph
+                # sampling; both operands are exact in either precision
+                defer = float(np.float32(u_act[i])) < dprob
             else:
                 defer = dprob > 0.5
             if self._budget_exhausted() and i == len(self.levels) - 1:
@@ -310,22 +349,22 @@ class OnlineCascade:
             for i, lvl in enumerate(self.levels):
                 lvl.cache_add(feat(i), y_expert)
             # imitation updates (OGD on cached demonstrations)
-            for lvl in self.levels:
-                lvl.student_update(self.rng)
+            for i, lvl in enumerate(self.levels):
+                lvl.student_update(rngs.cache[i])
             # deferral updates from Eq. (1) + Eq. (5), only when the
-            # expert annotation is available (paper §3)
-            reach = 1.0
+            # expert annotation is available (paper §3); z and mu*c - L
+            # are computed inside the jitted step (float32, shared with
+            # the batched engine)
+            y_arr = jnp.asarray([y_expert], jnp.int32)
+            w_one = jnp.ones((1,), jnp.float32)
+            reach = np.float32(1.0)
             for i, (lvl, probs, dp) in enumerate(
                     zip(self.levels, probs_list, dprob_list)):
-                z = 1.0 if int(np.argmax(probs)) != y_expert else 0.0
-                pl = float(-np.log(max(probs[y_expert], 1e-9)))
-                mcl = cfg.mu * self._defer_cost(i) - pl
                 lvl.dparams, lvl.dopt_state = lvl._deferral_step(
                     lvl.dparams, lvl.dopt_state,
-                    jnp.asarray(probs), jnp.asarray(z, jnp.float32),
-                    jnp.asarray(reach, jnp.float32),
-                    jnp.asarray(mcl, jnp.float32))
-                reach *= dp
+                    jnp.asarray(probs)[None], y_arr,
+                    jnp.asarray([reach], jnp.float32), w_one)
+                reach = np.float32(reach * np.float32(dp))
 
         # J(pi, t) bookkeeping (Eq. 1): use observed branch costs
         J_t = cfg.mu * episode_cost_units

@@ -65,18 +65,39 @@ def deferral_prob(params, probs):
     return jax.nn.sigmoid(deferral_logit(params, probs))
 
 
-def deferral_loss(params, probs, z, reach, mu_cost_minus_loss,
-                  calibration_factor: float):
-    """Combined per-sample objective (batched).
+def deferral_update_terms(probs, y, mu_defer_cost):
+    """In-graph inputs for the deferral update, shared by both engines.
+
+    probs: (B, C) float32; y: (B,) int expert labels; mu_defer_cost:
+    scalar mu * c_{i+1}.  Returns (z, mcl) with z the error indicator
+    1[argmax(probs) != y] and mcl = mu * c_{i+1} - L_i where
+    L_i = -log p_i(y).  Computing these in float32 inside the jitted step
+    (instead of host float64) is what keeps the sequential reference and
+    the batched engine bit-identical.
+    """
+    pred = jnp.argmax(probs, axis=-1)
+    z = (pred != y).astype(jnp.float32)
+    p_y = jnp.take_along_axis(probs, y[:, None], axis=-1)[:, 0]
+    mcl = mu_defer_cost - (-jnp.log(jnp.maximum(p_y, 1e-9)))
+    return z, mcl
+
+
+def deferral_loss_weighted(params, probs, z, reach, mu_cost_minus_loss, w,
+                           calibration_factor: float):
+    """Combined per-sample objective (Eq. 5 + Eq. 1), per-item weighted.
 
     probs: (B, C); z: (B,) error indicators; reach: (B,) p_reach_i;
-    mu_cost_minus_loss: (B,)  = mu * c_{i+1} - L_i  (fixed, no grad).
+    mu_cost_minus_loss: (B,) = mu * c_{i+1} - L_i (fixed, no grad);
+    w: (B,) weights (1 for items that reached this level with an expert
+    annotation, 0 otherwise).  With w == ones(1) this reduces bitwise to
+    the unweighted single-item objective (sum/1 == mean over one item).
     """
     f = deferral_prob(params, probs)
-    mse = jnp.mean(jnp.square(f - z))
-    cost = jnp.mean(reach * f * mu_cost_minus_loss)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    mse = jnp.sum(w * jnp.square(f - z)) / denom
+    cost = jnp.sum(w * reach * f * mu_cost_minus_loss) / denom
     cf = calibration_factor
     return cf * mse + (1.0 - cf) * cost
 
 
-deferral_grads = jax.grad(deferral_loss)
+deferral_grads_weighted = jax.grad(deferral_loss_weighted)

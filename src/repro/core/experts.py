@@ -35,6 +35,11 @@ class SimulatedExpert:
     def label(self, idx: int, doc: np.ndarray) -> int:
         return int(self._labels[idx])
 
+    def label_batch(self, idxs, docs) -> np.ndarray:
+        """Annotate a deferred batch in one call (zero compute here; the
+        batched engine routes all deferrals of a tick through this)."""
+        return self._labels[np.asarray(idxs, np.int64)].astype(np.int32)
+
 
 @dataclass
 class ModelExpert:
@@ -53,6 +58,15 @@ class ModelExpert:
         ids = hash_ids(doc, self.spec.vocab, self.spec.max_len)[None]
         probs = self._predict(self.params, jnp.asarray(ids))
         return int(jnp.argmax(probs[0]))
+
+    def label_batch(self, idxs, docs) -> np.ndarray:
+        """One batched forward for a tick's whole deferred subset."""
+        if len(docs) == 0:
+            return np.zeros((0,), np.int32)
+        ids = np.stack([hash_ids(d, self.spec.vocab, self.spec.max_len)
+                        for d in docs])
+        probs = self._predict(self.params, jnp.asarray(ids))
+        return np.asarray(jnp.argmax(probs, axis=-1), np.int32)
 
 
 def train_model_expert(stream: Stream, n_classes: int,

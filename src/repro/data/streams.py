@@ -18,6 +18,7 @@ in-repo model can replace it (core.experts.ModelExpert).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -97,8 +98,11 @@ class Stream:
             return self._expert_cache[expert]
         spec = self.spec
         acc = spec.expert_acc[expert]
+        # zlib.crc32, NOT hash(): str hashing is salted per process
+        # (PYTHONHASHSEED), which made expert annotations — and every
+        # downstream accuracy number — nondeterministic across runs.
         rng = np.random.default_rng(
-            abs(hash((self.seed, expert, spec.name))) % (1 << 32))
+            zlib.crc32(f"{self.seed}:{expert}:{spec.name}".encode()))
         rel = (self.lengths / max(np.mean(self.lengths), 1.0)) \
             ** spec.length_difficulty
         raw = rel / np.mean(rel) * (1.0 - acc)
@@ -159,7 +163,9 @@ def make_stream(name: str, seed: int = 0,
     if n_samples is not None:
         from dataclasses import replace
         spec = replace(spec, n_samples=n_samples)
-    rng = np.random.default_rng(abs(hash((seed, name))) % (1 << 32))
+    # zlib.crc32, NOT hash(): str hashing is salted per process, which
+    # silently regenerated a different corpus every run
+    rng = np.random.default_rng(zlib.crc32(f"{seed}:{name}".encode()))
     n = spec.n_samples
     labels = rng.choice(spec.n_classes, size=n, p=np.array(spec.class_probs))
     cats = rng.integers(0, _N_CATEGORIES, size=n)

@@ -1,47 +1,32 @@
 """Streaming cascade server — the paper's deployment shape (serving kind).
 
-Processes a query stream in micro-batches:
-  1. every query runs through the cascade students + deferral MLPs,
-  2. deferred queries are batched into ONE expert forward (batched
-     requests — the serving pattern App. B.1 could not reach on GPUs),
-  3. expert annotations feed the online updates (Algorithm 1), in stream
-     order.
+Two engines:
 
-Per-sample updates within a micro-batch are applied in arrival order, so
-with --microbatch 1 this is exactly Algorithm 1; larger micro-batches trade
-a bounded annotation delay for expert-batch throughput (documented
-deviation, EXPERIMENTS.md §Paper/Serving).
+* ``--engine batched`` (default): ``BatchedCascadeEngine`` serves S
+  concurrent stream lanes in lockstep — per-level batched student
+  forwards over the gathered alive subset, one batched expert forward per
+  tick for the deferred lanes, and per-tick weighted student/deferral
+  updates (see core/batched.py for the RNG/equivalence contract).
+* ``--engine sequential``: the per-item Algorithm-1 reference loop, with
+  micro-batched expert calls via a probe/replay pass (the pre-batched
+  serving path, kept for comparison and as the semantics oracle).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --dataset hatespeech \
-      --samples 2000 --mu 3e-7 --microbatch 16
+      --samples 2000 --mu 3e-7 --batch 64
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OnlineCascade, SimulatedExpert, default_cascade_config
-from repro.core.experts import ModelExpert, train_model_expert
-from repro.data import make_stream
-from repro.data.features import hash_ids
-from repro.models.students import tinytf_predict
-
-
-class BatchedModelExpert(ModelExpert):
-    """ModelExpert with a batched label path for the serving loop."""
-
-    def label_batch(self, docs) -> np.ndarray:
-        if not docs:
-            return np.zeros((0,), np.int32)
-        ids = np.stack([hash_ids(d, self.spec.vocab, self.spec.max_len)
-                        for d in docs])
-        probs = self._predict(self.params, jnp.asarray(ids))
-        return np.asarray(jnp.argmax(probs, axis=-1), np.int32)
+from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
+                        default_cascade_config)
+from repro.core.experts import train_model_expert
+from repro.core.rng import tick_rngs
 
 
 class _BatchProxy:
@@ -62,39 +47,69 @@ class _BatchProxy:
         return int(self.expert.label(idx, doc))
 
 
-def probe_route(cascade: OnlineCascade, idx: int, doc, rng) -> bool:
-    """Predict whether ``process(idx, doc)`` would consult the expert,
-    WITHOUT mutating cascade state.  Mirrors the level loop's rng draws
-    using a cloned generator so jump decisions line up with the replay."""
-    import jax.numpy as jnp
+def probe_route(cascade: OnlineCascade, doc, tick: int) -> bool:
+    """Predict whether processing ``doc`` at ``tick`` would consult the
+    expert, WITHOUT mutating cascade state.  The per-tick pre-split RNG
+    discipline (core.rng) lets the probe reproduce the exact DAgger jump
+    draws the replay pass will see."""
+    n_levels = len(cascade.levels)
+    u_jump = tick_rngs(cascade.cfg.seed, cascade.stream_id, tick,
+                       n_levels).jump.random(n_levels)
     for i, lvl in enumerate(cascade.levels):
-        if (not cascade._budget_exhausted() and rng.random() < lvl.beta):
+        if not cascade._budget_exhausted() and u_jump[i] < lvl.beta:
             return True                      # DAgger jump
         x = lvl.featurize(doc)
-        probs, dprob = lvl._predict_and_defer(
+        _, dprob = lvl._predict_and_defer(
             lvl.params, lvl.dparams, jnp.asarray(x))
         defer = float(dprob) > 0.5
-        if cascade._budget_exhausted() and i == len(cascade.levels) - 1:
+        if cascade._budget_exhausted() and i == n_levels - 1:
             defer = False
         if not defer:
             return False
     return True
 
 
+def _make_expert(stream, n_classes, expert_kind, samples, seed):
+    if expert_kind == "model":
+        print("training stand-in LLM expert ...", flush=True)
+        return train_model_expert(stream, n_classes, epochs=2,
+                                  max_samples=min(4000, samples), seed=seed)
+    return SimulatedExpert(stream, "gpt-3.5-turbo")
+
+
+def serve_stream_batched(dataset: str, samples: int, mu: float,
+                         batch: int = 64, expert_kind: str = "model",
+                         seed: int = 0, log_every: int = 500):
+    """Default serving path: the batched multi-stream engine."""
+    from repro.data import make_stream
+    stream = make_stream(dataset, seed=seed, n_samples=samples)
+    expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
+                          samples, seed)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
+                                 seed=seed, expert_cost=expert.cost)
+    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch)
+    t0 = time.time()
+    metrics = engine.run(stream, log_every=log_every)
+    dt = time.time() - t0
+    frac = metrics["expert_calls"] / len(stream)
+    print(f"\nserved {len(stream)} queries in {dt:.1f}s "
+          f"({metrics['items_per_sec']:.0f} items/s, batch={batch})")
+    print(f"accuracy={metrics['accuracy']:.4f}  "
+          f"expert_calls={metrics['expert_calls']} "
+          f"({frac:.1%} of stream)  cost_saving={1-frac:.1%}")
+    print(f"level fractions: "
+          f"{[round(f, 3) for f in metrics['level_fractions']]}")
+    return metrics
+
+
 def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
                  expert_kind: str = "model", seed: int = 0,
                  log_every: int = 500):
+    """Sequential reference loop with probe/replay expert micro-batching."""
+    from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     n_classes = stream.spec.n_classes
-
-    if expert_kind == "model":
-        print("training stand-in LLM expert ...", flush=True)
-        base = train_model_expert(stream, n_classes, epochs=2,
-                                  max_samples=min(4000, samples), seed=seed)
-        expert = BatchedModelExpert(params=base.params, spec=base.spec,
-                                    cost=base.cost)
-    else:
-        expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    expert = _make_expert(stream, n_classes, expert_kind, samples, seed)
 
     proxy = _BatchProxy(expert)
     cfg = default_cascade_config(n_classes=n_classes, mu=mu, seed=seed,
@@ -105,19 +120,20 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
     t0 = time.time()
     expert_batch_sizes = []
     i = 0
-    import copy
     while i < len(stream):
         j = min(i + microbatch, len(stream))
         batch_idx = list(range(i, j))
-        # Pass 1 (probe): predict which queries will reach the expert,
-        # using a CLONE of the rng so the replay sees identical jump draws.
-        probe_rng = copy.deepcopy(cascade.rng)
-        need = [k for k in batch_idx
-                if probe_route(cascade, k, stream.docs[k], probe_rng)]
+        # Pass 1 (probe): predict which queries will reach the expert.
+        # Item k of the batch will be processed at tick cascade.t + k + 1;
+        # the pre-split tick keys make the probe's jump draws exact.
+        need = [k for off, k in enumerate(batch_idx)
+                if probe_route(cascade, stream.docs[k],
+                               cascade.t + off + 1)]
         # Batched expert forward for just the deferred subset.
         if need:
-            if expert_kind == "model":
-                labels = expert.label_batch([stream.docs[k] for k in need])
+            lb = getattr(expert, "label_batch", None)
+            if lb is not None:
+                labels = lb(need, [stream.docs[k] for k in need])
             else:
                 labels = [expert.label(k, stream.docs[k]) for k in need]
             for k, y in zip(need, labels):
@@ -143,7 +159,7 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
     print(f"mean expert batch={mean_eb:.1f}  "
           f"probe mispredicts (single-call fallbacks)={proxy.fallback_calls}")
     print(f"level fractions: "
-          f"{[round(f, 3) for f in (cascade.level_counts / len(stream))]}")
+          f"{[round(float(f), 3) for f in (cascade.level_counts / len(stream))]}")
     return {"accuracy": acc, "expert_calls": cascade.expert_calls,
             "mean_expert_batch": mean_eb,
             "fallback_calls": proxy.fallback_calls,
@@ -156,13 +172,23 @@ def main():
                     choices=["imdb", "hatespeech", "isear", "fever"])
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--mu", type=float, default=3e-7)
-    ap.add_argument("--microbatch", type=int, default=16)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "sequential"])
+    ap.add_argument("--batch", type=int, default=64,
+                    help="concurrent stream lanes (batched engine)")
+    ap.add_argument("--microbatch", type=int, default=16,
+                    help="expert micro-batch (sequential engine)")
     ap.add_argument("--expert", default="model",
                     choices=["model", "simulated"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
-                 expert_kind=args.expert, seed=args.seed)
+    if args.engine == "batched":
+        serve_stream_batched(args.dataset, args.samples, args.mu,
+                             batch=args.batch, expert_kind=args.expert,
+                             seed=args.seed)
+    else:
+        serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
+                     expert_kind=args.expert, seed=args.seed)
 
 
 if __name__ == "__main__":

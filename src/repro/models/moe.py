@@ -33,6 +33,14 @@ except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import PartitionSpec as P
 
+import inspect
+
+# jax >= 0.6 renamed check_rep -> check_vma; pass whichever this jax has
+# (without the flag, unreduced-psum replication checks reject the body)
+_SHARD_MAP_CHECK_KW = (
+    "check_vma" if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep")
+
 
 def init_moe(key, cfg: ModelConfig):
     m = cfg.moe
@@ -219,7 +227,7 @@ def moe_ffn(x, params, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
         in_specs=(P(baxes, None), P(None, None), w_spec_in, w_spec_in,
                   w_spec_out),
         out_specs=(P(baxes, None), P()),
-        check_vma=False,
+        **{_SHARD_MAP_CHECK_KW: False},
     )(x2d, params["router"], params["w_in"], params["w_gate"],
       params["w_out"])
     return y2d.reshape(B, S, D), aux

@@ -63,6 +63,22 @@ def lr_loss(params, feats, labels):
     return jnp.mean(logz - gold)
 
 
+def _weighted_xent(logits, labels, w):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - gold) * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def lr_loss_weighted(params, feats, labels, w):
+    """Per-item-weighted xent — the OGD imitation objective shared by the
+    sequential cascade and the batched engine (identical float ops)."""
+    return _weighted_xent(lr_logits(params, feats), labels, w)
+
+
+def tinytf_loss_weighted(params, tokens, labels, w, spec: "TinyTFSpec"):
+    return _weighted_xent(tinytf_logits(params, tokens, spec), labels, w)
+
+
 # ---------------------------------------------------------------------------
 # Tiny transformer encoder classifier
 # ---------------------------------------------------------------------------

@@ -1,0 +1,38 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+The property-based tests import ``given``/``settings``/``st`` from here
+via a try/except fallback.  Each stubbed ``@given`` test becomes a
+zero-argument test that calls ``pytest.importorskip("hypothesis")`` at
+run time — so ONLY the property tests skip, and every plain test in the
+same module keeps running.  (A module-level importorskip would silently
+drop whole files of non-property coverage.)
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        def hypothesis_missing():
+            pytest.importorskip(
+                "hypothesis",
+                reason="property test needs hypothesis "
+                       "(pip install -e .[dev])")
+        hypothesis_missing.__name__ = fn.__name__
+        hypothesis_missing.__doc__ = fn.__doc__
+        return hypothesis_missing
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Accepts any ``st.<strategy>(...)`` call and returns None; the
+    values are only ever passed to the stubbed ``given`` above."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

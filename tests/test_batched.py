@@ -1,0 +1,149 @@
+"""BatchedCascadeEngine: parity with the sequential reference and
+multi-stream accounting (see core/batched.py for the contract)."""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
+                        default_cascade_config)
+from repro.data import make_stream
+
+
+def _engines(mu, n, dataset="imdb", seed=0, hard_budget=None, n_streams=1):
+    stream = make_stream(dataset, seed=seed, n_samples=n)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
+                                 seed=seed)
+    if hard_budget is not None:
+        cfg = replace(cfg, hard_budget=hard_budget)
+    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
+    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
+                               n_streams=n_streams)
+    return stream, seq, bat
+
+
+def _state_equal(seq, bat) -> bool:
+    for ls, lb in zip(seq.levels, bat.levels):
+        for attr in ("params", "opt_state", "dparams", "dopt_state"):
+            for a, b in zip(jax.tree.leaves(getattr(ls, attr)),
+                            jax.tree.leaves(getattr(lb, attr))):
+                if not bool(jax.numpy.array_equal(a, b)):
+                    return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# batch-size-1 parity: the acceptance contract
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dataset,mu,n", [
+    ("imdb", 3e-6, 400),
+    ("hatespeech", 3e-7, 400),
+])
+def test_batch1_bitwise_parity(dataset, mu, n):
+    """S == 1 must reproduce OnlineCascade bit-for-bit: identical
+    predictions, chosen levels, expert calls, and parameter state."""
+    stream, seq, bat = _engines(mu, n, dataset=dataset)
+    m_seq = seq.run(stream)
+    m_bat = bat.run(stream)
+    np.testing.assert_array_equal(m_seq["predictions"],
+                                  m_bat["predictions"])
+    np.testing.assert_array_equal(np.asarray(seq.history["level"]),
+                                  np.concatenate(bat.history["level"]))
+    assert m_seq["expert_calls"] == m_bat["expert_calls"]
+    assert _state_equal(seq, bat)
+
+
+def test_batch1_parity_with_hard_budget():
+    stream, seq, bat = _engines(3e-7, 300, hard_budget=40)
+    m_seq = seq.run(stream)
+    m_bat = bat.run(stream)
+    np.testing.assert_array_equal(m_seq["predictions"],
+                                  m_bat["predictions"])
+    assert m_seq["expert_calls"] == m_bat["expert_calls"] <= 40
+    assert _state_equal(seq, bat)
+
+
+# ---------------------------------------------------------------------------
+# multi-stream semantics
+# ---------------------------------------------------------------------------
+def test_multi_stream_per_lane_accounting():
+    """Per-lane expert_calls / level_fractions are tracked independently
+    and reconcile with the aggregate."""
+    n_streams, ticks = 8, 30
+    stream, _, bat = _engines(3e-7, n_streams * ticks,
+                              dataset="hatespeech", n_streams=n_streams)
+    for tk in range(ticks):
+        idxs = list(range(tk * n_streams, (tk + 1) * n_streams))
+        out = bat.process_tick(idxs, [stream.docs[i] for i in idxs])
+        assert out["predictions"].shape == (n_streams,)
+    per = bat.stream_metrics()
+    assert per["expert_calls"].shape == (n_streams,)
+    np.testing.assert_array_equal(per["items_seen"],
+                                  np.full(n_streams, ticks))
+    assert per["expert_calls"].sum() == bat.expert_calls_total
+    # each lane's level fractions are a distribution over exits
+    fr = per["level_fractions"]
+    assert fr.shape == (n_streams, len(bat.levels) + 1)
+    np.testing.assert_allclose(fr.sum(axis=1), np.ones(n_streams),
+                               atol=1e-9)
+    # per-lane level counts reconcile with the aggregate history
+    lv = np.stack(bat.history["level"])          # (ticks, S)
+    for s in range(n_streams):
+        for l in range(len(bat.levels) + 1):
+            assert bat.level_counts[s, l] == int(np.sum(lv[:, s] == l))
+
+
+def test_multi_stream_hard_budget_respected():
+    n_streams = 8
+    stream, _, bat = _engines(1e-7, 240, dataset="imdb",
+                              hard_budget=25, n_streams=n_streams)
+    m = bat.run(stream)
+    assert m["expert_calls"] <= 25
+
+
+def test_partial_final_tick():
+    """Streams whose length is not a multiple of n_streams still serve
+    every item exactly once."""
+    stream, _, bat = _engines(3e-7, 100, dataset="imdb", n_streams=8)
+    m = bat.run(stream)
+    assert len(m["predictions"]) == 100
+    assert int(bat.items_seen.sum()) == 100
+    assert m["predictions"].min() >= 0
+
+
+def test_reset_reproduces_run():
+    """reset() restores the exact initial state (the serving reuse path:
+    warm once, serve many streams)."""
+    stream, _, bat = _engines(3e-6, 192, dataset="imdb", n_streams=8)
+    m1 = bat.run(stream)
+    bat.reset()
+    m2 = bat.run(stream)
+    np.testing.assert_array_equal(m1["predictions"], m2["predictions"])
+    assert m1["expert_calls"] == m2["expert_calls"]
+
+
+# ---------------------------------------------------------------------------
+# vectorized ring buffer
+# ---------------------------------------------------------------------------
+def test_ring_buffer_matches_fifo_overwrite_order():
+    """A tick inserting more demonstrations than a cache holds keeps the
+    LAST cache_size items, like sequential FIFO inserts would."""
+    n_streams = 24
+    stream, _, bat = _engines(3e-7, n_streams, dataset="imdb",
+                              n_streams=n_streams)
+    # tick 1: beta0 == 1 so every lane DAgger-jumps to the expert
+    idxs = list(range(n_streams))
+    out = bat.process_tick(idxs, [stream.docs[i] for i in idxs])
+    assert out["expert_called"].all()
+    lvl0 = bat.levels[0]
+    size = lvl0.spec.cache_size
+    assert bat._cache_n[0] == size
+    assert bat._cache_ptr[0] == n_streams % size
+    # the cache must hold the last `size` lanes' labels, in ring order
+    got = np.asarray(bat._cache_y[0])
+    expect = np.zeros(size, np.int32)
+    labels = out["expert_labels"]
+    for j in range(n_streams):
+        expect[j % size] = labels[j]
+    np.testing.assert_array_equal(got, expect)
