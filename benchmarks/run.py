@@ -26,8 +26,8 @@ def main() -> None:
 
     from benchmarks import (batched_throughput, case_analysis,
                             cost_equilibrium, distribution_shift,
-                            prefill_cost, regret, roofline_report, table1,
-                            tradeoff_curves)
+                            prefill_cost, regret, roofline_report,
+                            sharded_throughput, table1, tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -43,6 +43,16 @@ def main() -> None:
                                     batches=(64,), quick=quick)
         record("batched_throughput", t0,
                f"batch64_speedup={bt['headline_speedup']:.1f}x")
+
+    if "sharded" not in args.skip:
+        t0 = time.time()
+        st = sharded_throughput.run(samples=min(n, 512), seed=args.seed,
+                                    quick=quick)
+        c = st["converged"]
+        record("sharded_throughput", t0,
+               f"data{st['ndev']}_projected="
+               f"{c['projected_speedup']:.1f}x_wall="
+               f"{c['wall_speedup']:.2f}x")
 
     if "table1" not in args.skip:
         t0 = time.time()

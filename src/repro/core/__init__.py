@@ -1,17 +1,18 @@
 # The paper's primary contribution: online cascade learning (Alg. 1).
-from repro.core.mdp import episode_cost, policy_value
-from repro.core.deferral import (
-    DeferralSpec, deferral_init, deferral_prob)
-from repro.core.cascade import (
-    LevelSpec, CascadeConfig, OnlineCascade, default_cascade_config)
 from repro.core.batched import BatchedCascadeEngine
-from repro.core.experts import SimulatedExpert, ModelExpert
-from repro.core.ensemble import OnlineEnsemble
+from repro.core.cascade import (
+    CascadeConfig, LevelSpec, OnlineCascade, default_cascade_config)
+from repro.core.deferral import (
+    DeferralSpec, deferral_init, deferral_prob, reexploration_floor)
 from repro.core.distill import distill_students
+from repro.core.ensemble import OnlineEnsemble
+from repro.core.experts import ModelExpert, SimulatedExpert
+from repro.core.mdp import episode_cost, policy_value
 
 __all__ = [
     "episode_cost", "policy_value",
     "DeferralSpec", "deferral_init", "deferral_prob",
+    "reexploration_floor",
     "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
     "BatchedCascadeEngine",
     "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",

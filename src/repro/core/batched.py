@@ -64,15 +64,45 @@ Deviations at S > 1 (documented, inherent to batching):
   * students/deferral MLPs take ONE weighted step per tick instead of one
     step per expert-labeled item — k demonstrations within a tick are
     aggregated, which is how batch-serving cascades amortize update cost
-    (cf. cascade-aware training; PAPERS.md);
+    (cf. cascade-aware training; PAPERS.md).  With
+    ``updates_per_tick="scaled"`` that single step is lr-scaled to stand
+    in for the tick's k per-item steps (``Optimizer.step_k``: EMA decays
+    raised to k, schedule counters advanced by k), which pins the
+    batched engine's expert-call counts to within ~1.5x of the
+    sequential reference on streams where the gates close early
+    (tests/test_batched.py pins this);
   * DAgger's beta decays per consumed item (``decay ** S`` per tick, all
     lanes sharing one beta): the students are shared, so the exploration
-    budget tracks demonstrations seen, not wall-clock ticks;
+    budget tracks demonstrations seen, not wall-clock ticks.  The
+    re-exploration floor (core.deferral) is applied once per tick at the
+    post-tick item count;
   * the hard expert budget is enforced at tick granularity: the first
     ``remaining`` deferred lanes (in lane order) get the expert, the rest
     fall back to the last student's prediction;
   * expert annotations land in the shared ring buffer in lane order
     within the tick.
+
+Lane sharding (``mesh=``)
+-------------------------
+Passing a ``jax.sharding.Mesh`` shards the engine's lane-major arrays —
+feature batches, per-lane probs/deferral outputs, called masks, expert
+labels, per-item weights — over the mesh's ('pod','data') axes with
+``NamedSharding`` (sharding.specs lane rules).  The cascade itself is
+ONE shared policy serving S lanes, so students, deferral MLPs, optimizer
+state and the demonstration ring buffers live replicated on the mesh;
+the per-level gathered predict+defer partitions into N independent
+per-device programs (no collectives in the serving path), while the
+per-tick weighted update steps and the ring-buffer scatter reduce over
+the sharded lane dim through the collectives GSPMD inserts.  The expert
+gather stays host-side (the expert is a host object).  ``n_streams``
+must divide by the lane-device count; bucketed subset sizes then divide
+too (``_bucket`` floors at the device count), except on a partial final
+tick, which falls back to replicated placement.  Routing is
+host-deterministic, so the sharded engine matches the unsharded engine
+on identical tick keys — identical predictions, levels, and expert
+calls; parameters agree to float tolerance (SPMD reassociates the
+weighted-update reductions).  tests/test_sharded.py asserts this on an
+8-virtual-device mesh; benchmarks/sharded_throughput.py measures it.
 """
 from __future__ import annotations
 
@@ -84,7 +114,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cascade import CascadeConfig, _Level
-from repro.core.deferral import deferral_prob
+from repro.core.deferral import deferral_prob, reexploration_floor
 from repro.core.rng import sample_cache_indices, tick_rngs
 
 
@@ -96,12 +126,36 @@ class BatchedCascadeEngine:
     ``expert.label(indices[s], docs[s])`` or the batched equivalent).
     """
 
-    def __init__(self, config: CascadeConfig, expert, n_streams: int = 64):
+    def __init__(self, config: CascadeConfig, expert, n_streams: int = 64,
+                 *, updates_per_tick: str = "single", mesh=None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
+        if updates_per_tick not in ("single", "scaled"):
+            raise ValueError(
+                f"updates_per_tick must be 'single' or 'scaled', "
+                f"got {updates_per_tick!r}")
         self.cfg = config
         self.expert = expert
         self.n_streams = n_streams
+        self.updates_per_tick = updates_per_tick
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding import (lane_count, put_lanes,
+                                        put_replicated,
+                                        replicated_sharding)
+            self._rep_sharding = replicated_sharding(mesh)
+            n_lane = lane_count(mesh)
+            if n_lane < 1 or n_streams % n_lane:
+                raise ValueError(
+                    f"n_streams={n_streams} must be a positive multiple "
+                    f"of the mesh's lane-device count {n_lane}")
+            self._n_lane_devices = n_lane
+            self._put_lane = lambda x: put_lanes(x, mesh)
+            self._put_rep = lambda x: put_replicated(x, mesh)
+        else:
+            self._n_lane_devices = 1
+            self._put_lane = jnp.asarray
+            self._put_rep = jnp.asarray
         keys = jax.random.split(jax.random.PRNGKey(config.seed),
                                 len(config.levels))
         # identical construction (and PRNG keys) to OnlineCascade so the
@@ -113,9 +167,21 @@ class BatchedCascadeEngine:
                                else config.expert_cost))
             for i, (spec, k) in enumerate(zip(config.levels, keys))]
         nlev = len(self.levels)
+        if mesh is not None:
+            # the cascade is SHARED across lanes: students, deferral MLPs
+            # and their optimizer states live replicated on the mesh (and
+            # the levels' reset() snapshots point at the replicated
+            # copies, so a reset engine stays mesh-placed)
+            for lvl in self.levels:
+                (lvl.params, lvl.opt_state, lvl.dparams,
+                 lvl.dopt_state) = jax.device_put(
+                    (lvl.params, lvl.opt_state, lvl.dparams,
+                     lvl.dopt_state), self._rep_sharding)
+                lvl._init_state = (lvl.params, lvl.opt_state,
+                                   lvl.dparams, lvl.dopt_state)
         # vectorized ring buffers (device) + host mirrors of fill/ptr
-        self._cache_x = [jnp.asarray(lvl.cache_x) for lvl in self.levels]
-        self._cache_y = [jnp.asarray(lvl.cache_y) for lvl in self.levels]
+        self._cache_x = [self._put_rep(lvl.cache_x) for lvl in self.levels]
+        self._cache_y = [self._put_rep(lvl.cache_y) for lvl in self.levels]
         self._cache_n = [0] * nlev
         self._cache_ptr = [0] * nlev
         self.t = 0
@@ -139,9 +205,9 @@ class BatchedCascadeEngine:
             lvl.reset()
         nlev = len(self.levels)
         # device ring buffers may have been donated — rebuild from the
-        # levels' (zeroed) host templates
-        self._cache_x = [jnp.asarray(lvl.cache_x) for lvl in self.levels]
-        self._cache_y = [jnp.asarray(lvl.cache_y) for lvl in self.levels]
+        # levels' (zeroed) host templates, on the same mesh placement
+        self._cache_x = [self._put_rep(lvl.cache_x) for lvl in self.levels]
+        self._cache_y = [self._put_rep(lvl.cache_y) for lvl in self.levels]
         self._cache_n = [0] * nlev
         self._cache_ptr = [0] * nlev
         self.t = 0
@@ -196,16 +262,28 @@ class BatchedCascadeEngine:
                 new_cy.append(cy_t[i].at[slot].set(y_full, mode="drop"))
             return tuple(new_cx), tuple(new_cy)
 
-        self._scatter = jax.jit(scatter, donate_argnums=(0, 1))
+        if self.mesh is not None:
+            # pin the ring buffers replicated so the donated outputs
+            # match the inputs' placement tick after tick; the lane-dim
+            # cumsum/scatter over sharded `called`/`feats` lowers to the
+            # collectives GSPMD inserts for the cross-lane insert order
+            self._scatter = jax.jit(scatter, donate_argnums=(0, 1),
+                                    out_shardings=self._rep_sharding)
+        else:
+            self._scatter = jax.jit(scatter, donate_argnums=(0, 1))
         self._bs_list = bs_list
 
     def _bucket(self, n: int) -> int:
-        """Smallest padded batch size for a subset of n lanes: powers of
-        two (min 8) capped at n_streams, so each level compiles O(log S)
-        shapes.  With n_streams == 1 this is exactly 1 — the reference's
-        per-item shape, which keeps the parity contract bitwise."""
-        b = 8
-        while b < n:
+        """Smallest padded batch size for a subset of n lanes: the
+        lane-device count doubled up to at least max(8, n), capped at
+        n_streams — every bucket stays divisible by the device count
+        (including non-power-of-two meshes) and each level compiles
+        O(log S) shapes.  Without a mesh this reduces to the powers-of-
+        two-from-8 schedule, and with n_streams == 1 it is exactly 1 —
+        the reference's per-item shape, which keeps the parity contract
+        bitwise."""
+        b = self._n_lane_devices
+        while b < max(8, n):
             b *= 2
         return min(b, self.n_streams)
 
@@ -261,10 +339,9 @@ class BatchedCascadeEngine:
         jumped = np.zeros(S, bool)
         eval_mask = np.zeros((nlev, S), bool)
         dprob_h = np.zeros((nlev, S), np.float32)
+        probs_h = np.zeros((nlev, S, cfg.n_classes), np.float32)
         predictions = np.zeros(S, np.int64)
         exit_level = np.full(S, nlev, np.int64)   # nlev = reached expert
-        sub_sel: list = [None] * nlev       # lanes evaluated per level
-        sub_probs: list = [None] * nlev     # device (B, C) per level
         for i, lvl in enumerate(self.levels):
             jump_now = alive & jump[i]
             jumped |= jump_now
@@ -277,13 +354,12 @@ class BatchedCascadeEngine:
             xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
             xb[:sel.size] = fi[sel]
             probs_d, dprob_d = self._predict_defer[i](
-                lvl.params, lvl.dparams, jnp.asarray(xb))
-            sub_sel[i] = sel
-            sub_probs[i] = probs_d
+                lvl.params, lvl.dparams, self._put_lane(xb))
             probs_np = np.asarray(probs_d)[:sel.size]
             dprob_np = np.asarray(dprob_d)[:sel.size]
             eval_mask[i, sel] = True
             dprob_h[i, sel] = dprob_np
+            probs_h[i, sel] = probs_np
             if cfg.sample_actions:
                 defer_np = u_act[i, sel] < dprob_np
             else:
@@ -332,7 +408,8 @@ class BatchedCascadeEngine:
 
         if called.any():
             # host mirrors first: sampling sees the post-insert fill level
-            k = int(called.sum())
+            sel_c = np.flatnonzero(called)
+            k = sel_c.size
             ptr_pre = np.asarray(self._cache_ptr, np.int32)
             idx_t = []
             for i, lvl in enumerate(self.levels):
@@ -351,14 +428,33 @@ class BatchedCascadeEngine:
                 lvl = self.levels[i]
                 arr = np.zeros((S,) + lvl.cache_x.shape[1:],
                                lvl.cache_x.dtype)
-                for s in np.flatnonzero(called):
+                for s in sel_c:
                     arr[s] = lvl.featurize(docs[s])
+                feats_cache[i] = arr
                 return arr
+
+            # every annotated lane calibrates EVERY gate (core.deferral):
+            # levels the route never evaluated for a called lane (DAgger
+            # jumps short-circuit the walk) get probs/dprob computed here
+            # against the pre-update students, exactly like the reference
+            for i, lvl in enumerate(self.levels):
+                missing = np.flatnonzero(called & ~eval_mask[i])
+                if missing.size == 0:
+                    continue
+                fi = scatter_feats(i)
+                B = self._bucket(missing.size)
+                xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
+                xb[:missing.size] = fi[missing]
+                probs_d, dprob_d = self._predict_defer[i](
+                    lvl.params, lvl.dparams, self._put_lane(xb))
+                probs_h[i, missing] = np.asarray(probs_d)[:missing.size]
+                dprob_h[i, missing] = np.asarray(dprob_d)[:missing.size]
 
             new_cx, new_cy = self._scatter(
                 tuple(self._cache_x), tuple(self._cache_y),
-                tuple(jnp.asarray(scatter_feats(i)) for i in range(nlev)),
-                jnp.asarray(y_full), jnp.asarray(called),
+                tuple(self._put_lane(scatter_feats(i))
+                      for i in range(nlev)),
+                self._put_lane(y_full), self._put_lane(called),
                 jnp.asarray(ptr_pre))
             self._cache_x = list(new_cx)
             self._cache_y = list(new_cy)
@@ -370,34 +466,48 @@ class BatchedCascadeEngine:
             reach = np.ones((nlev, S), np.float32)
             for i in range(1, nlev):
                 reach[i] = reach[i - 1] * dprob_h[i - 1]
+            k_arr = jnp.asarray(float(k), jnp.float32)
+            scaled = self.updates_per_tick == "scaled" and k > 1
+            B_c = self._bucket(k)
             for i, lvl in enumerate(self.levels):
                 xb = self._cache_x[i][idx_t[i]]
                 yb = self._cache_y[i][idx_t[i]]
                 w = jnp.ones((self._bs_list[i],), jnp.float32)
-                lvl.params, lvl.opt_state = lvl._student_step(
-                    lvl.params, lvl.opt_state, xb, yb, w)
-                sel = sub_sel[i]
-                wz = called & eval_mask[i]
-                if sel is None or not wz.any():
-                    continue
-                B = sub_probs[i].shape[0]
-                y_sub = np.zeros(B, np.int32)
-                y_sub[:sel.size] = y_full[sel]
-                reach_sub = np.zeros(B, np.float32)
-                reach_sub[:sel.size] = reach[i, sel]
-                w_sub = np.zeros(B, np.float32)
-                w_sub[:sel.size] = wz[sel].astype(np.float32)
-                lvl.dparams, lvl.dopt_state = lvl._deferral_step(
-                    lvl.dparams, lvl.dopt_state, sub_probs[i],
-                    jnp.asarray(y_sub), jnp.asarray(reach_sub),
-                    jnp.asarray(w_sub))
+                if scaled:
+                    lvl.params, lvl.opt_state = lvl._student_step_k(
+                        lvl.params, lvl.opt_state, xb, yb, w, k_arr)
+                else:
+                    lvl.params, lvl.opt_state = lvl._student_step(
+                        lvl.params, lvl.opt_state, xb, yb, w)
+                probs_b = np.zeros((B_c, cfg.n_classes), np.float32)
+                probs_b[:k] = probs_h[i, sel_c]
+                y_b = np.zeros(B_c, np.int32)
+                y_b[:k] = y_full[sel_c]
+                reach_b = np.zeros(B_c, np.float32)
+                reach_b[:k] = reach[i, sel_c]
+                w_b = np.zeros(B_c, np.float32)
+                w_b[:k] = 1.0
+                args = (self._put_lane(probs_b), self._put_lane(y_b),
+                        self._put_lane(reach_b), self._put_lane(w_b))
+                if scaled:
+                    lvl.dparams, lvl.dopt_state = lvl._deferral_step_k(
+                        lvl.dparams, lvl.dopt_state, *args, k_arr)
+                else:
+                    lvl.dparams, lvl.dopt_state = lvl._deferral_step(
+                        lvl.dparams, lvl.dopt_state, *args)
 
         # beta decays per consumed ITEM (decay^S per tick): the students
         # are shared across lanes, so the DAgger exploration budget is
         # measured in demonstrations seen, matching the reference's
-        # schedule in item-space (identical at S == 1)
+        # schedule in item-space (identical at S == 1).  The
+        # re-exploration floor (core.deferral) is applied once per tick
+        # at the post-tick item count — identical at S == 1, and within
+        # a tick's granularity of the reference elsewhere.
+        t_items = int(self.items_seen.sum()) + S
         for lvl in self.levels:
-            lvl.beta *= lvl.spec.beta_decay ** S
+            lvl.beta = max(
+                lvl.beta * lvl.spec.beta_decay ** S,
+                reexploration_floor(lvl.spec.beta_floor, t_items))
 
         # per-stream accounting
         lanes = np.arange(S)

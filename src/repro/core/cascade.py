@@ -21,7 +21,7 @@ calibration factor.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -30,25 +30,27 @@ import numpy as np
 
 from repro.core.deferral import (
     DeferralSpec, deferral_grads_weighted, deferral_init,
-    deferral_prob, deferral_update_terms)
-from repro.core.experts import ModelExpert, SimulatedExpert
+    deferral_prob, deferral_update_terms, reexploration_floor)
 from repro.core.rng import sample_cache_indices, tick_rngs
 from repro.data.features import hash_bow, hash_ids
 from repro.models.students import (
-    LRSpec, TinyTFSpec, lr_init, lr_loss_weighted, lr_predict,
+    LRSpec, MLPSpec, TinyTFSpec, lr_init, lr_loss_weighted, lr_predict,
+    mlp_init, mlp_loss_weighted, mlp_predict,
     tinytf_init, tinytf_loss_weighted, tinytf_predict)
 from repro.optim import adam, ogd_sqrt_t
 
 
 @dataclass(frozen=True)
 class LevelSpec:
-    kind: str                     # 'lr' | 'tinytf'
+    kind: str                     # 'lr' | 'mlp' | 'tinytf' | 'tinytf_large'
     cost: float                   # c_i (model cost units, LR = 1)
     cache_size: int = 8
     batch_size: int = 8
     student_lr: float = 0.5       # OGD eta0 (lr) / adam lr (tinytf)
     deferral_lr: float = 7e-4     # paper Tables 3/4 "Learning Rate"
     beta_decay: float = 0.97      # paper "Decaying Factor"
+    beta_floor: float = 0.05      # re-exploration floor0 (core.deferral);
+                                  # 0 disables the trickle
     calibration_factor: float = 0.4
 
 
@@ -59,8 +61,9 @@ class CascadeConfig:
     expert_cost: float            # c_N in model cost units
     mu: float = 2e-6              # cost weighting factor (user budget knob)
     beta0: float = 1.0            # initial DAgger jump probability
-    n_features: int = 2048        # hashed BoW dim for LR
+    n_features: int = 2048        # hashed BoW dim for LR / MLP
     tf_spec: Optional[TinyTFSpec] = None
+    mlp_spec: Optional[MLPSpec] = None
     sample_actions: bool = False  # paper samples action_i ~ f_i; default
                                   # thresholded at 0.5 (§3 calibration)
     hard_budget: Optional[int] = None  # max expert calls (None = mu-driven)
@@ -107,6 +110,15 @@ class _Level:
             self.sspec = LRSpec(n_features=cfg.n_features, n_classes=C)
             self.params = lr_init(k1, self.sspec)
             self.opt = ogd_sqrt_t(spec.student_lr)
+            feat_shape = (cfg.n_features,)
+            feat_dtype = np.float32
+        elif spec.kind == "mlp":
+            from dataclasses import replace
+            base = cfg.mlp_spec or MLPSpec()
+            self.sspec = replace(base, n_features=cfg.n_features,
+                                 n_classes=C)
+            self.params = mlp_init(k1, self.sspec)
+            self.opt = adam(spec.student_lr)
             feat_shape = (cfg.n_features,)
             feat_dtype = np.float32
         else:
@@ -167,6 +179,12 @@ class _Level:
 
             def student_loss(p, xb, yb, w):
                 return lr_loss_weighted(p, xb, yb, w)
+        elif self.spec.kind == "mlp":
+            def predict(params, x):
+                return mlp_predict(params, x[None])[0]
+
+            def student_loss(p, xb, yb, w):
+                return mlp_loss_weighted(p, xb, yb, w)
         else:
             def predict(params, x):
                 return tinytf_predict(params, x[None], sspec)[0]
@@ -177,6 +195,12 @@ class _Level:
         def student_step(params, opt_state, xb, yb, w):
             grads = jax.grad(student_loss)(params, xb, yb, w)
             return opt.step(params, grads, opt_state)
+
+        def student_step_k(params, opt_state, xb, yb, w, k):
+            """One lr-scaled step standing in for k per-item steps (the
+            batched engine's updates_per_tick="scaled" mode)."""
+            grads = jax.grad(student_loss)(params, xb, yb, w)
+            return opt.step_k(params, grads, opt_state, k)
 
         cf = spec.calibration_factor
         mu_dc = self.mu_defer_cost
@@ -190,9 +214,18 @@ class _Level:
                                             w, cf)
             return dopt.step(dparams, grads, dstate)
 
-        self._predict_batch = (
-            (lambda p, xb: lr_predict(p, xb)) if spec.kind == "lr"
-            else (lambda p, xb: tinytf_predict(p, xb, sspec)))
+        def deferral_step_k(dparams, dstate, probs, y, reach, w, k):
+            z, mcl = deferral_update_terms(probs, y, mu_dc)
+            grads = deferral_grads_weighted(dparams, probs, z, reach, mcl,
+                                            w, cf)
+            return dopt.step_k(dparams, grads, dstate, k)
+
+        if spec.kind == "lr":
+            self._predict_batch = lambda p, xb: lr_predict(p, xb)
+        elif spec.kind == "mlp":
+            self._predict_batch = lambda p, xb: mlp_predict(p, xb)
+        else:
+            self._predict_batch = lambda p, xb: tinytf_predict(p, xb, sspec)
 
         def predict_and_defer(params, dparams, x):
             probs = predict(params, x)
@@ -201,7 +234,9 @@ class _Level:
         self._predict = jax.jit(predict)
         self._predict_and_defer = jax.jit(predict_and_defer)
         self._student_step = jax.jit(student_step)
+        self._student_step_k = jax.jit(student_step_k)
         self._deferral_step = jax.jit(deferral_step)
+        self._deferral_step_k = jax.jit(deferral_step_k)
         self._dprob = jax.jit(
             lambda dp, probs: deferral_prob(dp, probs[None])[0])
 
@@ -224,7 +259,7 @@ class _Level:
             self.params, self.opt_state, xb, yb, w)
 
     def featurize(self, doc: np.ndarray) -> np.ndarray:
-        if self.spec.kind == "lr":
+        if self.spec.kind in ("lr", "mlp"):
             return hash_bow(doc, self.cfg.n_features)
         return hash_ids(doc, self.sspec.vocab, self.sspec.max_len)
 
@@ -345,6 +380,17 @@ class OnlineCascade:
             prediction = y_expert
             self.expert_calls += 1
             episode_cost_units += self.cfg.expert_cost
+            # every annotated item calibrates EVERY gate (core.deferral):
+            # levels the walk never consulted (DAgger jumps short-circuit
+            # before the predict) get their probs/dprob computed here,
+            # against the pre-update student — a training-side forward,
+            # not costed as serving compute
+            for i in range(len(probs_list), n_levels):
+                lvl = self.levels[i]
+                probs_j, dprob_j = lvl._predict_and_defer(
+                    lvl.params, lvl.dparams, jnp.asarray(feat(i)))
+                probs_list.append(np.asarray(probs_j))
+                dprob_list.append(float(dprob_j))
             # aggregate demonstration into every level's cache
             for i, lvl in enumerate(self.levels):
                 lvl.cache_add(feat(i), y_expert)
@@ -370,9 +416,10 @@ class OnlineCascade:
         J_t = cfg.mu * episode_cost_units
         self.J_cum += J_t
 
-        # decay beta (per level)
+        # decay beta (per level), floored by the re-exploration schedule
         for lvl in self.levels:
-            lvl.beta *= lvl.spec.beta_decay
+            lvl.beta = max(lvl.beta * lvl.spec.beta_decay,
+                           reexploration_floor(lvl.spec.beta_floor, self.t))
 
         self.total_cost += episode_cost_units
         self.level_counts[chosen_level if not expert_called

@@ -19,10 +19,30 @@ the two: grad = cf * grad_MSE + (1 - cf) * grad_J.
 The final bias is initialized positive so gates start open ("at startup,
 the policy keeps its gates open, allowing all initial inputs to flow
 through the cascade" — §1).
+
+Re-exploration (beta floor)
+---------------------------
+Calibration only sees expert-annotated queries, which creates a feedback
+loop once a gate starts closing: the only items still annotated are the
+ones the gate *chose* to defer — the hard cases, where z is mostly 1 —
+so the gate is pushed back open, while the easy majority that would pull
+it shut is never annotated again ("From Deferral to Learning", Wu et al.
+2025: cascades must keep learning after deferral stops).  The fix has two
+halves, shared by both engines:
+
+  * a decaying DAgger floor (``reexploration_floor``): the jump
+    probability never falls below ``beta_floor / sqrt(t)``, so an
+    *unbiased* trickle of expert annotations keeps flowing forever.  The
+    floor adds O(sqrt(T)) exploration cost over T items — a vanishing
+    average, so Theorem 3.2's no-regret guarantee is preserved;
+  * every annotated item calibrates **every** gate (jump-annotated items
+    included), not just the gates the item's walk happened to consult —
+    otherwise the trickle never reaches the gates at all.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from math import sqrt
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +53,19 @@ class DeferralSpec:
     n_classes: int
     hidden: int = 32
     init_open: float = 2.0       # initial logit -> sigmoid(2.0) ~ 0.88
+
+
+def reexploration_floor(beta_floor: float, t: int) -> float:
+    """Minimum DAgger jump probability after ``t`` consumed items.
+
+    ``beta_t = max(beta_t-1 * decay, reexploration_floor(floor0, t))``
+    keeps a decaying trickle of unbiased expert annotations flowing after
+    the exponential DAgger schedule has effectively hit zero, so the
+    deferral gates never freeze in their last calibrated state (see
+    module docstring).  The 1/sqrt(t) decay costs O(sqrt(T)) extra expert
+    calls over T items — asymptotically free in average regret.
+    """
+    return beta_floor / sqrt(max(t, 1))
 
 
 def _features(probs: jax.Array) -> jax.Array:

@@ -37,6 +37,6 @@ def policy_value(defer_probs_seq: jax.Array, pred_losses_seq: jax.Array,
                  defer_costs: jax.Array, mu: float) -> jax.Array:
     """J(pi, T): Eq. (1) summed over T episodes (batched episode_cost)."""
     costs, _ = jax.vmap(
-        lambda f, l: episode_cost(f, l, defer_costs, mu))(
+        lambda fs, ls: episode_cost(fs, ls, defer_costs, mu))(
             defer_probs_seq, pred_losses_seq)
     return jnp.sum(costs)

@@ -16,9 +16,13 @@ def hash_bow(tokens: np.ndarray, n_features: int = 2048) -> np.ndarray:
 
 def hash_ids(tokens: np.ndarray, vocab: int = 4096,
              max_len: int = 128) -> np.ndarray:
-    """Hashed token ids for the tiny-transformer student; 0 is pad."""
+    """Hashed token ids for the tiny-transformer student; 0 is pad.
+
+    Only the first ``max_len`` tokens are hashed — everything past the
+    truncation point is dropped anyway, and this runs per item in the
+    serving hot path."""
+    tokens = tokens[:max_len]
     ids = (tokens.astype(np.int64) * _HASH_PRIME % (1 << 31)) % (vocab - 1) + 1
     out = np.zeros((max_len,), np.int32)
-    L = min(len(ids), max_len)
-    out[:L] = ids[:L]
+    out[:len(ids)] = ids
     return out

@@ -34,10 +34,10 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import sharding as shd
 from repro.configs import get_config, list_architectures
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import INPUT_SHAPES, input_specs, resolve_config
@@ -45,7 +45,6 @@ from repro.metrics.roofline import (
     V5E, model_flops_6nd, parse_collective_bytes, roofline_terms)
 from repro.models import transformer as tf_model
 from repro.optim import adamw
-from repro import sharding as shd
 from repro.sharding import param_pspecs
 
 

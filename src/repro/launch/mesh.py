@@ -23,3 +23,26 @@ def make_host_mesh():
     """Whatever devices exist, as a (data, model) mesh with model = 1."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """``"data=8"`` / ``"pod=2,data=4"`` -> a Mesh with those axes.
+
+    The CLI knob behind ``serve.py --mesh``: axis sizes must multiply to
+    at most the available device count (use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for virtual
+    CPU devices).  Returns None for an empty/absent spec.
+    """
+    if not spec:
+        return None
+    shape, axes = [], []
+    for part in spec.split(","):
+        name, _, size = part.partition("=")
+        name = name.strip()
+        if not name or not size.strip().isdigit() or int(size) < 1:
+            raise ValueError(f"bad mesh spec {spec!r}: expected "
+                             f"'axis=N[,axis=N...]' with N >= 1, "
+                             f"got {part!r}")
+        axes.append(name)
+        shape.append(int(size))
+    return make_mesh(tuple(shape), tuple(axes))

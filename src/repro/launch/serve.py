@@ -79,21 +79,31 @@ def _make_expert(stream, n_classes, expert_kind, samples, seed):
 
 def serve_stream_batched(dataset: str, samples: int, mu: float,
                          batch: int = 64, expert_kind: str = "model",
-                         seed: int = 0, log_every: int = 500):
-    """Default serving path: the batched multi-stream engine."""
+                         seed: int = 0, log_every: int = 500,
+                         mesh=None, updates_per_tick: str = "single"):
+    """Default serving path: the batched multi-stream engine.
+
+    ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
+    shards the stream lanes over the mesh's ('pod','data') axes; the
+    cascade state stays replicated.  ``updates_per_tick="scaled"``
+    lr-scales the per-tick update by the number of expert demos, closing
+    the item-space adaptation gap of one-update-per-tick batching."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
                           samples, seed)
     cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
                                  seed=seed, expert_cost=expert.cost)
-    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch)
+    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch, mesh=mesh,
+                                  updates_per_tick=updates_per_tick)
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
     dt = time.time() - t0
     frac = metrics["expert_calls"] / len(stream)
+    lanes = (f"batch={batch}" if mesh is None else
+             f"batch={batch} mesh={dict(mesh.shape)}")
     print(f"\nserved {len(stream)} queries in {dt:.1f}s "
-          f"({metrics['items_per_sec']:.0f} items/s, batch={batch})")
+          f"({metrics['items_per_sec']:.0f} items/s, {lanes})")
     print(f"accuracy={metrics['accuracy']:.4f}  "
           f"expert_calls={metrics['expert_calls']} "
           f"({frac:.1%} of stream)  cost_saving={1-frac:.1%}")
@@ -176,6 +186,16 @@ def main():
                     choices=["batched", "sequential"])
     ap.add_argument("--batch", type=int, default=64,
                     help="concurrent stream lanes (batched engine)")
+    ap.add_argument("--mesh", default="",
+                    help="lane-shard the batched engine over a device "
+                         "mesh, e.g. 'data=8' or 'pod=2,data=4' (set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for virtual CPU devices)")
+    ap.add_argument("--updates", default="single",
+                    choices=["single", "scaled"],
+                    help="per-tick update scheduling (batched engine): "
+                         "'scaled' lr-scales the one weighted step by "
+                         "the tick's expert-demo count")
     ap.add_argument("--microbatch", type=int, default=16,
                     help="expert micro-batch (sequential engine)")
     ap.add_argument("--expert", default="model",
@@ -183,9 +203,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "batched":
+        from repro.launch.mesh import parse_mesh_spec
         serve_stream_batched(args.dataset, args.samples, args.mu,
                              batch=args.batch, expert_kind=args.expert,
-                             seed=args.seed)
+                             seed=args.seed,
+                             mesh=parse_mesh_spec(args.mesh),
+                             updates_per_tick=args.updates)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed)

@@ -17,15 +17,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro import sharding as shd
+from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data.streams import lm_batches
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tf_model
 from repro.optim import adamw
-from repro import sharding as shd
 from repro.sharding import param_pspecs
 
 

@@ -11,12 +11,19 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.configs.base import ModelConfig
-from repro.models.students import LRSpec, TinyTFSpec
+from repro.models.students import LRSpec, MLPSpec, TinyTFSpec
 
 
 def lr_flops(spec: LRSpec, train: bool = False) -> float:
     f = 2.0 * spec.n_features * spec.n_classes
     return 2.0 * f if train else f     # paper C.1: training ~ 2x inference
+
+
+def mlp_flops(spec: MLPSpec, train: bool = False) -> float:
+    h, nl = spec.hidden, spec.n_layers
+    f = 2.0 * (spec.n_features * h + (nl - 1) * h * h
+               + h * spec.n_classes)
+    return 2.0 * f if train else f
 
 
 def tinytf_flops(spec: TinyTFSpec, train: bool = False) -> float:
@@ -72,9 +79,12 @@ class CostModel:
 def relative_costs(lr_spec: LRSpec, tf_spec: TinyTFSpec,
                    expert_cfg: ModelConfig = None,
                    doc_len: int = 256,
+                   mlp_spec: MLPSpec = None,
                    extra: Dict[str, float] = None) -> CostModel:
     base = lr_flops(lr_spec)
     units = {"lr": 1.0, "tinytf": tinytf_flops(tf_spec) / base}
+    if mlp_spec is not None:
+        units["mlp"] = mlp_flops(mlp_spec) / base
     if expert_cfg is not None:
         units["expert"] = expert_prefill_flops(expert_cfg, doc_len) / base
     if extra:

@@ -2,10 +2,15 @@
 
 * ``LogisticRegression`` over hashed bag-of-words features — the paper's
   level-1 model (cost 1 in its units).
+* ``MLP`` — a deep dense classifier over the same hashed bag-of-words
+  (a fastText-style intermediate student).  Its forward is a pure GEMM
+  chain, which makes it the compute-bound workhorse of the sharded
+  serving benchmarks: batched dense chains partition cleanly over a
+  lane-sharded mesh.
 * ``TinyTransformer`` — a small encoder classifier standing in for
   BERT-base/large (offline container: no HF weights).  The capability and
-  cost ordering LR << TinyTF << expert matches the paper's cascade; relative
-  costs are recomputed from our FLOP model (metrics.costs).
+  cost ordering LR << MLP << TinyTF << expert matches the paper's cascade;
+  relative costs are recomputed from our FLOP model (metrics.costs).
 
 Both expose the same functional interface:
   init(key, spec)            -> params
@@ -77,6 +82,45 @@ def lr_loss_weighted(params, feats, labels, w):
 
 def tinytf_loss_weighted(params, tokens, labels, w, spec: "TinyTFSpec"):
     return _weighted_xent(tinytf_logits(params, tokens, spec), labels, w)
+
+
+# ---------------------------------------------------------------------------
+# Deep MLP over hashed bag-of-words
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MLPSpec:
+    n_features: int = 2048
+    hidden: int = 1024
+    n_layers: int = 4          # hidden layers (tanh)
+    n_classes: int = 2
+
+
+def mlp_init(key, spec: MLPSpec):
+    dims = [spec.n_features] + [spec.hidden] * spec.n_layers
+    keys = jax.random.split(key, spec.n_layers + 1)
+    params = {
+        "layers": [{"w": dense_init(k, d_in, d_out, jnp.float32),
+                    "b": jnp.zeros((d_out,), jnp.float32)}
+                   for k, d_in, d_out in zip(keys, dims[:-1], dims[1:])],
+        "cls_w": jnp.zeros((dims[-1], spec.n_classes), jnp.float32),
+        "cls_b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+    return params
+
+
+def mlp_logits(params, feats):
+    h = feats
+    for lp in params["layers"]:
+        h = jnp.tanh(h @ lp["w"] + lp["b"])
+    return h @ params["cls_w"] + params["cls_b"]
+
+
+def mlp_predict(params, feats):
+    return jax.nn.softmax(mlp_logits(params, feats), axis=-1)
+
+
+def mlp_loss_weighted(params, feats, labels, w):
+    return _weighted_xent(mlp_logits(params, feats), labels, w)
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,49 @@ def batch_axes(mesh: Optional[Mesh] = None):
     return axes if axes else None
 
 
+# ---------------------------------------------------------------------------
+# Lane sharding (batched cascade engine)
+# ---------------------------------------------------------------------------
+# The batched cascade engine's per-lane state is lane-major: feature
+# batches, deferral probs, alive/called masks, expert labels, per-lane
+# weights.  Lanes shard over the batch-like mesh axes ('pod','data');
+# the shared cascade state (student params, deferral MLPs, optimizer
+# state, demonstration ring buffers) is replicated — it is one cascade
+# serving S lanes, not S cascades.
+
+def lane_count(mesh: Mesh) -> int:
+    """Number of devices the lane dim shards over ('pod' x 'data')."""
+    return _axis_size(mesh, batch_axes(mesh))
+
+
+def lane_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding dim 0 over the lane axes."""
+    axes = batch_axes(mesh)
+    return P(axes) if axes else P()
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, lane_spec(mesh))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def put_lanes(x, mesh: Mesh) -> jax.Array:
+    """Place a lane-major host array with dim 0 sharded over the lane
+    axes; falls back to replication when the dim does not divide (e.g. a
+    partial final tick), mirroring ``constrain``'s divisibility rule."""
+    x = np.asarray(x)
+    if x.ndim and _fits(mesh, x.shape[0], batch_axes(mesh)):
+        return jax.device_put(x, lane_sharding(mesh))
+    return jax.device_put(x, replicated_sharding(mesh))
+
+
+def put_replicated(x, mesh: Mesh) -> jax.Array:
+    return jax.device_put(x, replicated_sharding(mesh))
+
+
 def _axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

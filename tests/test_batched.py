@@ -124,6 +124,38 @@ def test_reset_reproduces_run():
 
 
 # ---------------------------------------------------------------------------
+# update-step scheduling (updates_per_tick="scaled")
+# ---------------------------------------------------------------------------
+def test_scaled_updates_close_expert_call_gap():
+    """ROADMAP item 3 regression: one weighted update per tick adapts too
+    slowly in item-space at S=64 (expert-call counts 2-8x the sequential
+    reference on streams where the gates close early).  The lr-scaled
+    mode (one step standing in for the tick's k per-item steps via
+    Optimizer.step_k) must pin the count to within 1.5x of the
+    reference."""
+    n, mu = 2048, 1e-6
+    stream = make_stream("imdb", seed=0, n_samples=n)
+    cfg = default_cascade_config(n_classes=2, mu=mu, seed=0)
+    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
+    m_seq = seq.run(stream)
+    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
+                               n_streams=64, updates_per_tick="scaled")
+    m_bat = bat.run(stream)
+    ratio = m_bat["expert_calls"] / max(m_seq["expert_calls"], 1)
+    assert ratio <= 1.5, (
+        f"scaled updates: {m_bat['expert_calls']} expert calls vs "
+        f"sequential {m_seq['expert_calls']} ({ratio:.2f}x > 1.5x)")
+
+
+def test_updates_per_tick_validated():
+    stream, _, _ = _engines(3e-7, 8)
+    cfg = default_cascade_config(n_classes=2, mu=3e-7, seed=0)
+    with pytest.raises(ValueError):
+        BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
+                             n_streams=8, updates_per_tick="double")
+
+
+# ---------------------------------------------------------------------------
 # vectorized ring buffer
 # ---------------------------------------------------------------------------
 def test_ring_buffer_matches_fifo_overwrite_order():

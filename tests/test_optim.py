@@ -70,6 +70,54 @@ def test_adam_bf16_state_dtype():
     assert float(p2["w"][0]) < 1.0
 
 
+# ---------------------------------------------------------------------------
+# step_k (one application standing in for k sequential steps)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_opt,rtol", [
+    (lambda: sgd(0.1), 1e-5), (lambda: momentum(0.05), 1e-5),
+    (lambda: adam(1e-2), 1e-5), (lambda: adamw(1e-2), 1e-5),
+    # the sqrt-schedule's midpoint-integral closure is ~3.5% off at t=0
+    (lambda: ogd_sqrt_t(0.5), 0.05),
+])
+def test_step_k_of_one_approximates_step(make_opt, rtol):
+    """step_k with k=1 must reproduce a single step (same state counters,
+    parameters equal to float tolerance — b1**k goes through a traced
+    pow, so bitwise equality is not required)."""
+    opt = make_opt()
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.3, 0.7])}
+    s1 = opt.init(p)
+    p_a, s_a = opt.step(p, g, s1)
+    p_b, s_b = opt.step_k(p, g, opt.init(p), jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(p_b["w"]), np.asarray(p_a["w"]),
+                               rtol=rtol)
+    assert int(s_b["count"]) == int(s_a["count"]) == 1
+
+
+@pytest.mark.parametrize("make_opt,rtol", [
+    (lambda: sgd(0.1), 1e-6), (lambda: momentum(0.05), 1e-5),
+    (lambda: ogd_sqrt_t(0.5), 0.05), (lambda: adam(1e-2), 0.35),
+])
+def test_step_k_tracks_k_repeated_steps(make_opt, rtol):
+    """On a constant gradient, step_k(k) lands near k composed steps
+    (exact for sgd and momentum; the sqrt-integral / EMA closures are
+    first-order approximations for the others) and advances counters
+    by k."""
+    k = 6
+    opt = make_opt()
+    p = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([0.4])}
+    s = opt.init(p)
+    p_seq = p
+    for _ in range(k):
+        p_seq, s = opt.step(p_seq, g, s)
+    p_k, s_k = opt.step_k(p, g, opt.init(p), jnp.float32(k))
+    assert int(s_k["count"]) == int(s["count"]) == k
+    delta_seq = float(p_seq["w"][0]) - 1.0
+    delta_k = float(p_k["w"][0]) - 1.0
+    np.testing.assert_allclose(delta_k, delta_seq, rtol=rtol)
+
+
 @settings(max_examples=20, deadline=None)
 @given(lr=st.floats(1e-4, 1e-1), steps=st.integers(1, 30))
 def test_momentum_converges_on_quadratic(lr, steps):

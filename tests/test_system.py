@@ -21,17 +21,13 @@ def imdb_run():
     return stream, expert, cas, metrics
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: on the (now deterministic) 1k-item "
-           "imdb draw the deferral gates stay open (>85% expert calls); "
-           "gate re-calibration is tracked in ROADMAP open items")
 def test_cascade_saves_cost_with_usable_accuracy(imdb_run):
     """The paper's headline: comparable accuracy at a fraction of the LLM
-    calls.  At this 1k-item stream the gates are still closing (the
-    paper's headline 70-90% savings shows at 2k+ items — see
-    benchmarks/case_analysis.py); require real savings and accuracy
-    within 15 points of the expert."""
+    calls.  Passing since the deferral-gate freeze fix (core.deferral:
+    beta-floor re-exploration + every-annotation gate calibration) — the
+    gates now close mid-stream instead of flapping open on the biased
+    hard-case annotations; require real savings and accuracy within 15
+    points of the expert."""
     stream, expert, cas, m = imdb_run
     frac_calls = m["expert_calls"] / N
     assert frac_calls < 0.85, f"no savings: {frac_calls}"
