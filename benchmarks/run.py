@@ -24,10 +24,11 @@ def main() -> None:
                     help="benchmark names to skip")
     args = ap.parse_args()
 
-    from benchmarks import (batched_throughput, case_analysis,
-                            cost_equilibrium, distribution_shift,
-                            prefill_cost, regret, roofline_report,
-                            sharded_throughput, table1, tradeoff_curves)
+    from benchmarks import (async_throughput, batched_throughput,
+                            case_analysis, cost_equilibrium,
+                            distribution_shift, prefill_cost, regret,
+                            roofline_report, sharded_throughput, table1,
+                            tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -43,6 +44,14 @@ def main() -> None:
                                     batches=(64,), quick=quick)
         record("batched_throughput", t0,
                f"batch64_speedup={bt['headline_speedup']:.1f}x")
+
+    if "async" not in args.skip:
+        t0 = time.time()
+        at = async_throughput.run(samples=min(n, 384), seed=args.seed,
+                                  quick=quick)
+        record("async_throughput", t0,
+               f"padded_overlap="
+               f"{at['headline_overlap_speedup']:.2f}x")
 
     if "sharded" not in args.skip:
         t0 = time.time()

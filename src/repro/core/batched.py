@@ -82,6 +82,51 @@ Deviations at S > 1 (documented, inherent to batching):
   * expert annotations land in the shared ring buffer in lane order
     within the tick.
 
+Async expert queue (``max_delay=``)
+-----------------------------------
+The tick loop is a route/commit pair around a double-buffered deferred-
+lane queue, so the host-side expert forward no longer serializes with
+student compute:
+
+  route (tick t)
+    * the vectorized cascade walk runs as before; the tick's deferred
+      subset is *submitted* to the expert (``expert.submit`` — thread-
+      backed for ``ModelExpert``, resolved inline for
+      ``SimulatedExpert``) instead of being waited on;
+    * deferred lanes emit the LAST student's prediction provisionally
+      (its probs are already in hand: every annotated lane calibrates
+      every gate, and those calibration forwards run at route time
+      against the tick's pre-update students — training-side compute,
+      not costed, exactly the values the synchronous engine computes
+      after its expert call);
+    * expert-call accounting (budget, cost, ``expert_calls``) happens at
+      submit time — annotation *latency* never changes which lanes get
+      the expert.
+
+  commit (tick t + max_delay, end of tick)
+    * the tick's ticket is resolved (blocking if the expert is slower
+      than ``max_delay`` ticks of student compute — that is the bound),
+      and the annotations are applied exactly as the synchronous engine
+      would have: ring-buffer scatter, per-tick weighted student and
+      deferral/gate-calibration updates, in FIFO tick order with the
+      tick's own cache-sampling RNG.  Commit order is deterministic for
+      any expert latency — results never depend on thread timing.
+
+``max_delay=0`` degenerates to the synchronous engine: route submits and
+immediately commits inside the same ``process_tick``, executing the
+identical op sequence — the S == 1 and lane-sharded parity contracts
+hold **bitwise** at ``max_delay=0``.  With ``max_delay=D >= 1`` the
+update stream lags the route stream by exactly D ticks (bounded
+annotation delay): a tick's route sees parameters that have consumed all
+demonstrations up to D+1 ticks back.  Beta still decays per consumed
+item per tick at route time, and the demonstrations-seen re-exploration
+floor is unchanged — delay shifts *when* updates land, never *which*
+draws or annotations occur.  ``flush()`` (called by ``run`` at stream
+end and available to servers) drains the queue.  Predictions already
+emitted stay provisional — the accuracy cost of the delay is measured,
+not hidden (tests/test_async.py pins the bounded-delay regression;
+benchmarks/async_throughput.py measures the expert/student overlap win).
+
 Lane sharding (``mesh=``)
 -------------------------
 Passing a ``jax.sharding.Mesh`` shards the engine's lane-major arrays —
@@ -107,15 +152,37 @@ weighted-update reductions).  tests/test_sharded.py asserts this on an
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence
+from collections import deque
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import CascadeConfig, _Level
+from repro.core.cascade import CascadeConfig, _Level, make_history
 from repro.core.deferral import deferral_prob, reexploration_floor
+from repro.core.experts import ExpertTicket
 from repro.core.rng import sample_cache_indices, tick_rngs
+
+
+@dataclass
+class _PendingTick:
+    """One routed tick whose expert annotations are still in flight.
+
+    Holds exactly what the commit needs to replay the synchronous
+    engine's update block once the labels land: the called-lane feature
+    rows per level, the route-time probs/dprob of every level at the
+    called lanes (gate calibration inputs), and the tick's own
+    cache-sampling generators."""
+    ticket: ExpertTicket
+    t: int                        # tick this record was routed at
+    called: np.ndarray            # (S,) bool — lanes annotated this tick
+    sel_c: np.ndarray             # called lane indices
+    feats: List[np.ndarray]       # per-level (S, ...) host feature rows
+    probs: np.ndarray             # (nlev, S, C) route-time student probs
+    dprob: np.ndarray             # (nlev, S) route-time deferral probs
+    cache_rngs: list              # per-level np generators (lane-0 tick)
 
 
 class BatchedCascadeEngine:
@@ -127,17 +194,22 @@ class BatchedCascadeEngine:
     """
 
     def __init__(self, config: CascadeConfig, expert, n_streams: int = 64,
-                 *, updates_per_tick: str = "single", mesh=None):
+                 *, updates_per_tick: str = "single", mesh=None,
+                 max_delay: int = 0,
+                 history_limit: Optional[int] = None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if updates_per_tick not in ("single", "scaled"):
             raise ValueError(
                 f"updates_per_tick must be 'single' or 'scaled', "
                 f"got {updates_per_tick!r}")
+        if max_delay < 0:
+            raise ValueError(f"max_delay must be >= 0, got {max_delay}")
         self.cfg = config
         self.expert = expert
         self.n_streams = n_streams
         self.updates_per_tick = updates_per_tick
+        self.max_delay = int(max_delay)
         self.mesh = mesh
         if mesh is not None:
             from repro.sharding import (lane_count, put_lanes,
@@ -192,10 +264,10 @@ class BatchedCascadeEngine:
         self.level_counts = np.zeros((S, nlev + 1), np.int64)
         self.items_seen = np.zeros(S, np.int64)
         self.J_cum = np.zeros(S, np.float64)
-        self.history: Dict[str, list] = {
-            "level": [], "pred": [], "expert_called": [], "cost": [],
-            "J": [],
-        }
+        self.history = make_history(history_limit)
+        # double-buffered deferred-lane queue: routed ticks whose expert
+        # annotations are still in flight (at most max_delay + 1 deep)
+        self._pending: deque = deque()
         self._build_steps()
 
     def reset(self):
@@ -216,8 +288,11 @@ class BatchedCascadeEngine:
         self.level_counts[:] = 0
         self.items_seen[:] = 0
         self.J_cum[:] = 0
-        for v in self.history.values():
-            v.clear()
+        if self.history is not None:
+            for v in self.history.values():
+                v.clear()
+        # in-flight annotations belong to the abandoned stream
+        self._pending.clear()
 
     # -- aggregates -----------------------------------------------------
     @property
@@ -294,6 +369,20 @@ class BatchedCascadeEngine:
             return np.asarray(lb(idxs, docs), np.int32)
         return np.asarray([self.expert.label(i, d)
                            for i, d in zip(idxs, docs)], np.int32)
+
+    def _expert_submit(self, idxs: Sequence[int], docs) -> ExpertTicket:
+        """Enqueue a batch annotation; experts without the async
+        interface resolve synchronously (still one batched call)."""
+        sub = getattr(self.expert, "submit", None)
+        if sub is not None:
+            return sub(idxs, docs)
+        return ExpertTicket(labels=self._expert_label_batch(idxs, docs))
+
+    def _expert_poll(self, ticket: ExpertTicket) -> np.ndarray:
+        poll = getattr(self.expert, "poll", None)
+        if poll is not None:
+            return np.asarray(poll(ticket, block=True), np.int32)
+        return np.asarray(ticket.result(), np.int32)
 
     # -- one lockstep tick ----------------------------------------------
     def process_tick(self, indices: Sequence[int], docs) -> dict:
@@ -385,18 +474,13 @@ class BatchedCascadeEngine:
                 called[idx_want[remaining:]] = False
         overflow = want & ~called
 
-        y_full = np.zeros(S, np.int32)
-        if called.any():
-            sel = np.flatnonzero(called)
-            y_full[sel] = self._expert_label_batch(
-                [int(indices[s]) for s in sel], [docs[s] for s in sel])
-            predictions[sel] = y_full[sel]
         for s in np.flatnonzero(overflow):
             # budget overflow: fall back to the last student, like the
             # reference's exhausted-budget path (rare; never at S == 1).
-            # Matching the reference's quirk, the fallback forward is not
-            # costed and the lane is counted as a last-level exit even if
-            # it jumped earlier
+            # The fallback forward is real compute and is costed as an
+            # evaluation of the last level, identically to the
+            # sequential reference; the lane is counted as a last-level
+            # exit even if it jumped earlier
             lvl = self.levels[-1]
             probs = np.asarray(lvl._predict(
                 lvl.params, jnp.asarray(feats(nlev - 1)[s])))
@@ -404,24 +488,18 @@ class BatchedCascadeEngine:
 
         levels_out = np.where(called, nlev,
                               np.where(overflow, nlev - 1, exit_level))
-        cost_out = cost_h + np.where(called, cfg.expert_cost, 0.0)
+        cost_out = (cost_h + np.where(called, cfg.expert_cost, 0.0)
+                    + np.where(overflow, self.levels[-1].spec.cost, 0.0))
 
+        y_full = np.zeros(S, np.int32)
+        resolved = False
+        rec = None
         if called.any():
-            # host mirrors first: sampling sees the post-insert fill level
             sel_c = np.flatnonzero(called)
-            k = sel_c.size
-            ptr_pre = np.asarray(self._cache_ptr, np.int32)
-            idx_t = []
-            for i, lvl in enumerate(self.levels):
-                size = lvl.spec.cache_size
-                self._cache_n[i] = min(self._cache_n[i] + k, size)
-                self._cache_ptr[i] = (self._cache_ptr[i] + k) % size
-                idx_t.append(jnp.asarray(sample_cache_indices(
-                    cache_rngs[i], self._cache_n[i],
-                    self._bs_list[i]).astype(np.int32)))
-            # the scatter only reads the called lanes' rows (others are
-            # dropped), so for levels the route never featurized, hash
-            # just those k docs instead of all S
+
+            # the update only reads the called lanes' rows (others are
+            # dropped by the scatter), so for levels the route never
+            # featurized, hash just those k docs instead of all S
             def scatter_feats(i):
                 if feats_cache[i] is not None:
                     return feats_cache[i]
@@ -435,8 +513,11 @@ class BatchedCascadeEngine:
 
             # every annotated lane calibrates EVERY gate (core.deferral):
             # levels the route never evaluated for a called lane (DAgger
-            # jumps short-circuit the walk) get probs/dprob computed here
-            # against the pre-update students, exactly like the reference
+            # jumps short-circuit the walk) get probs/dprob computed at
+            # route time against the tick's pre-update students — the
+            # same values the synchronous engine computes after its
+            # expert call (no update can land in between), and what the
+            # deferred lanes' provisional predictions read from
             for i, lvl in enumerate(self.levels):
                 missing = np.flatnonzero(called & ~eval_mask[i])
                 if missing.size == 0:
@@ -450,51 +531,39 @@ class BatchedCascadeEngine:
                 probs_h[i, missing] = np.asarray(probs_d)[:missing.size]
                 dprob_h[i, missing] = np.asarray(dprob_d)[:missing.size]
 
-            new_cx, new_cy = self._scatter(
-                tuple(self._cache_x), tuple(self._cache_y),
-                tuple(self._put_lane(scatter_feats(i))
-                      for i in range(nlev)),
-                self._put_lane(y_full), self._put_lane(called),
-                jnp.asarray(ptr_pre))
-            self._cache_x = list(new_cx)
-            self._cache_y = list(new_cy)
-            # batched, per-item-weighted updates through the SAME jitted
-            # step callables as the sequential reference (bit-identical
-            # state evolution; see module docstring)
-            # reach[l] = prod_{k<l} dprob[k], float32 left fold like the
-            # reference's running product
-            reach = np.ones((nlev, S), np.float32)
-            for i in range(1, nlev):
-                reach[i] = reach[i - 1] * dprob_h[i - 1]
-            k_arr = jnp.asarray(float(k), jnp.float32)
-            scaled = self.updates_per_tick == "scaled" and k > 1
-            B_c = self._bucket(k)
-            for i, lvl in enumerate(self.levels):
-                xb = self._cache_x[i][idx_t[i]]
-                yb = self._cache_y[i][idx_t[i]]
-                w = jnp.ones((self._bs_list[i],), jnp.float32)
-                if scaled:
-                    lvl.params, lvl.opt_state = lvl._student_step_k(
-                        lvl.params, lvl.opt_state, xb, yb, w, k_arr)
-                else:
-                    lvl.params, lvl.opt_state = lvl._student_step(
-                        lvl.params, lvl.opt_state, xb, yb, w)
-                probs_b = np.zeros((B_c, cfg.n_classes), np.float32)
-                probs_b[:k] = probs_h[i, sel_c]
-                y_b = np.zeros(B_c, np.int32)
-                y_b[:k] = y_full[sel_c]
-                reach_b = np.zeros(B_c, np.float32)
-                reach_b[:k] = reach[i, sel_c]
-                w_b = np.zeros(B_c, np.float32)
-                w_b[:k] = 1.0
-                args = (self._put_lane(probs_b), self._put_lane(y_b),
-                        self._put_lane(reach_b), self._put_lane(w_b))
-                if scaled:
-                    lvl.dparams, lvl.dopt_state = lvl._deferral_step_k(
-                        lvl.dparams, lvl.dopt_state, *args, k_arr)
-                else:
-                    lvl.dparams, lvl.dopt_state = lvl._deferral_step(
-                        lvl.dparams, lvl.dopt_state, *args)
+            ticket = self._expert_submit(
+                [int(indices[s]) for s in sel_c],
+                [docs[s] for s in sel_c])
+            if self.max_delay == 0:
+                # synchronous path: resolve inline — with the identical
+                # op sequence as ever (bitwise parity contract)
+                y_full[sel_c] = self._expert_poll(ticket)
+                predictions[sel_c] = y_full[sel_c]
+                resolved = True
+            else:
+                # deferred lanes emit the LAST student's prediction
+                # provisionally; the annotation lands max_delay ticks
+                # later.  The probs are the route-time calibration
+                # forwards — no extra serving compute
+                predictions[sel_c] = np.argmax(
+                    probs_h[nlev - 1, sel_c], axis=-1)
+            rec = _PendingTick(
+                ticket=ticket, t=t, called=called.copy(), sel_c=sel_c,
+                feats=[scatter_feats(i) for i in range(nlev)],
+                probs=probs_h, dprob=dprob_h, cache_rngs=cache_rngs)
+
+        if rec is not None:
+            self._pending.append(rec)
+        # bounded annotation delay, measured in TICKS (not in
+        # expert-calling ticks): a record routed at tick u commits at the
+        # end of tick u + max_delay even if no intervening tick called
+        # the expert — otherwise the converged regime's trickle
+        # annotations (the PR-2 beta-floor calibration signal) could be
+        # starved for arbitrarily many ticks.  Blocks on the expert if it
+        # is slower than max_delay ticks of student compute —
+        # deterministic for any expert latency
+        while self._pending and t - self._pending[0].t >= self.max_delay:
+            self._commit(self._pending.popleft())
 
         # beta decays per consumed ITEM (decay^S per tick): the students
         # are shared across lanes, so the DAgger exploration budget is
@@ -517,18 +586,95 @@ class BatchedCascadeEngine:
         self.level_counts[lanes, levels_out] += 1
         self.items_seen[lanes] += 1
         self.J_cum[lanes] += J_t
-        self.history["level"].append(levels_out.copy())
-        self.history["pred"].append(predictions.astype(np.int64))
-        self.history["expert_called"].append(called.copy())
-        self.history["cost"].append(cost_out.copy())
-        self.history["J"].append(J_t.copy())
+        if self.history is not None:
+            self.history["level"].append(levels_out.copy())
+            self.history["pred"].append(predictions.astype(np.int64))
+            self.history["expert_called"].append(called.copy())
+            self.history["cost"].append(cost_out.copy())
+            self.history["J"].append(J_t.copy())
         return {
             "predictions": predictions.astype(np.int64),
             "levels": levels_out,
             "expert_called": called,
             "cost_units": cost_out,
-            "expert_labels": np.where(called, y_full, -1),
+            # annotations still in flight (max_delay >= 1) report -1;
+            # they land at commit time, never in a tick's output
+            "expert_labels": (np.where(called, y_full,
+                                       np.int32(-1)).astype(np.int32)
+                              if resolved else np.full(S, -1, np.int32)),
         }
+
+    # -- commit: apply one routed tick's landed annotations --------------
+    def _commit(self, rec: _PendingTick) -> None:
+        """Apply a routed tick's expert annotations: ring-buffer scatter
+        plus the per-tick weighted student/deferral updates, exactly the
+        synchronous engine's update block replayed in FIFO tick order
+        with the tick's own cache-sampling generators."""
+        cfg = self.cfg
+        nlev = len(self.levels)
+        sel_c = rec.sel_c
+        k = sel_c.size
+        y_sel = self._expert_poll(rec.ticket)
+        S = rec.called.shape[0]
+        y_full = np.zeros(S, np.int32)
+        y_full[sel_c] = y_sel
+
+        # host mirrors first: sampling sees the post-insert fill level
+        ptr_pre = np.asarray(self._cache_ptr, np.int32)
+        idx_t = []
+        for i, lvl in enumerate(self.levels):
+            size = lvl.spec.cache_size
+            self._cache_n[i] = min(self._cache_n[i] + k, size)
+            self._cache_ptr[i] = (self._cache_ptr[i] + k) % size
+            idx_t.append(jnp.asarray(sample_cache_indices(
+                rec.cache_rngs[i], self._cache_n[i],
+                self._bs_list[i]).astype(np.int32)))
+
+        new_cx, new_cy = self._scatter(
+            tuple(self._cache_x), tuple(self._cache_y),
+            tuple(self._put_lane(rec.feats[i]) for i in range(nlev)),
+            self._put_lane(y_full), self._put_lane(rec.called),
+            jnp.asarray(ptr_pre))
+        self._cache_x = list(new_cx)
+        self._cache_y = list(new_cy)
+        # batched, per-item-weighted updates through the SAME jitted
+        # step callables as the sequential reference (bit-identical
+        # state evolution; see module docstring)
+        # reach[l] = prod_{k<l} dprob[k], float32 left fold like the
+        # reference's running product
+        reach = np.ones((nlev, S), np.float32)
+        for i in range(1, nlev):
+            reach[i] = reach[i - 1] * rec.dprob[i - 1]
+        k_arr = (jnp.asarray(float(k), jnp.float32)
+                 if self.updates_per_tick == "scaled" and k > 1 else None)
+        B_c = self._bucket(k)
+        for i, lvl in enumerate(self.levels):
+            xb = self._cache_x[i][idx_t[i]]
+            yb = self._cache_y[i][idx_t[i]]
+            w = jnp.ones((self._bs_list[i],), jnp.float32)
+            lvl.apply_student_update(xb, yb, w, k_arr)
+            probs_b = np.zeros((B_c, cfg.n_classes), np.float32)
+            probs_b[:k] = rec.probs[i, sel_c]
+            y_b = np.zeros(B_c, np.int32)
+            y_b[:k] = y_sel
+            reach_b = np.zeros(B_c, np.float32)
+            reach_b[:k] = reach[i, sel_c]
+            w_b = np.zeros(B_c, np.float32)
+            w_b[:k] = 1.0
+            lvl.apply_deferral_update(
+                self._put_lane(probs_b), self._put_lane(y_b),
+                self._put_lane(reach_b), self._put_lane(w_b), k_arr)
+
+    def flush(self) -> int:
+        """Drain the deferred-annotation queue (blocking): apply every
+        in-flight tick's updates.  Called by ``run`` at stream end;
+        servers should call it before checkpointing or idling.  Returns
+        the number of ticks committed."""
+        n = 0
+        while self._pending:
+            self._commit(self._pending.popleft())
+            n += 1
+        return n
 
     # -- per-stream metrics ---------------------------------------------
     def stream_metrics(self) -> dict:
@@ -560,6 +706,7 @@ class BatchedCascadeEngine:
                 acc = float(np.mean(preds[:stop] == stream.labels[:stop]))
                 print(f"[{stop}/{n}] acc={acc:.4f} "
                       f"expert_calls={self.expert_calls_total}")
+        self.flush()
         dt = time.time() - t0
         labels = stream.labels
         acc = float(np.mean(preds == labels))

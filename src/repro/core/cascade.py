@@ -21,6 +21,7 @@ calibration factor.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -92,6 +93,26 @@ def default_cascade_config(n_classes: int, mu: float = 2e-6,
     return CascadeConfig(levels=tuple(levels), n_classes=n_classes,
                          expert_cost=expert_cost, mu=mu, beta0=beta0,
                          tf_spec=tf_spec, seed=seed)
+
+
+_HISTORY_KEYS = ("level", "pred", "expert_called", "cost", "J")
+
+
+def make_history(limit: Optional[int]) -> Optional[Dict[str, list]]:
+    """Per-item diagnostic buffers for a serving engine.
+
+    ``None`` keeps full unbounded lists (analysis/benchmark runs);
+    ``k > 0`` keeps the most recent k entries (deque, O(k) memory on
+    multi-million-item streams); ``0`` disables history entirely (the
+    production serving loops — aggregates in ``level_counts`` etc. are
+    unaffected)."""
+    if limit is None:
+        return {k: [] for k in _HISTORY_KEYS}
+    if limit < 0:
+        raise ValueError(f"history_limit must be >= 0 or None, got {limit}")
+    if limit == 0:
+        return None
+    return {k: deque(maxlen=limit) for k in _HISTORY_KEYS}
 
 
 class _Level:
@@ -255,8 +276,29 @@ class _Level:
         xb = jnp.asarray(self.cache_x[idx])
         yb = jnp.asarray(self.cache_y[idx])
         w = jnp.ones((bs,), jnp.float32)
-        self.params, self.opt_state = self._student_step(
-            self.params, self.opt_state, xb, yb, w)
+        self.apply_student_update(xb, yb, w)
+
+    # -- shared update application (both engines commit through these, so
+    #    the route/commit split of the async batched engine and the inline
+    #    sequential walk evolve state through identical compiled steps) ---
+    def apply_student_update(self, xb, yb, w, k=None):
+        """One weighted imitation step; ``k`` (a float32 scalar) selects
+        the lr-scaled variant standing in for k per-item steps."""
+        if k is None:
+            self.params, self.opt_state = self._student_step(
+                self.params, self.opt_state, xb, yb, w)
+        else:
+            self.params, self.opt_state = self._student_step_k(
+                self.params, self.opt_state, xb, yb, w, k)
+
+    def apply_deferral_update(self, probs, y, reach, w, k=None):
+        """One weighted deferral-gate step from Eq. (1)/Eq. (5) terms."""
+        if k is None:
+            self.dparams, self.dopt_state = self._deferral_step(
+                self.dparams, self.dopt_state, probs, y, reach, w)
+        else:
+            self.dparams, self.dopt_state = self._deferral_step_k(
+                self.dparams, self.dopt_state, probs, y, reach, w, k)
 
     def featurize(self, doc: np.ndarray) -> np.ndarray:
         if self.spec.kind in ("lr", "mlp"):
@@ -267,7 +309,8 @@ class _Level:
 class OnlineCascade:
     """Algorithm 1 driver.  ``process(idx, doc)`` handles one stream item."""
 
-    def __init__(self, config: CascadeConfig, expert):
+    def __init__(self, config: CascadeConfig, expert,
+                 history_limit: Optional[int] = None):
         self.cfg = config
         self.expert = expert
         keys = jax.random.split(jax.random.PRNGKey(config.seed),
@@ -287,10 +330,7 @@ class OnlineCascade:
         self.total_cost = 0.0
         self.level_counts = np.zeros(len(config.levels) + 1, np.int64)
         self.J_cum = 0.0
-        self.history: Dict[str, list] = {
-            "level": [], "pred": [], "expert_called": [], "cost": [],
-            "J": [],
-        }
+        self.history = make_history(history_limit)
 
     def reset(self):
         """Back to item 0 of a fresh stream; compiled jits are kept."""
@@ -301,8 +341,9 @@ class OnlineCascade:
         self.total_cost = 0.0
         self.level_counts[:] = 0
         self.J_cum = 0.0
-        for v in self.history.values():
-            v.clear()
+        if self.history is not None:
+            for v in self.history.values():
+                v.clear()
 
     # -- cost of deferring FROM level i (to i+1) -----------------------
     def _defer_cost(self, i: int) -> float:
@@ -366,13 +407,17 @@ class OnlineCascade:
             expert_called = True
 
         if expert_called and self._budget_exhausted():
-            # fall back to the last student instead of the expert
+            # fall back to the last student instead of the expert; the
+            # fallback forward is real compute and is costed like any
+            # other evaluation of that level (the batched engine's
+            # overflow path costs it identically — S=1 parity)
             lvl = self.levels[-1]
             x = feat(len(self.levels) - 1)
             probs = np.asarray(lvl._predict(lvl.params, jnp.asarray(x)))
             prediction = int(np.argmax(probs))
             chosen_level = len(self.levels) - 1
             expert_called = False
+            episode_cost_units += lvl.spec.cost
 
         y_expert = None
         if expert_called:
@@ -406,8 +451,7 @@ class OnlineCascade:
             reach = np.float32(1.0)
             for i, (lvl, probs, dp) in enumerate(
                     zip(self.levels, probs_list, dprob_list)):
-                lvl.dparams, lvl.dopt_state = lvl._deferral_step(
-                    lvl.dparams, lvl.dopt_state,
+                lvl.apply_deferral_update(
                     jnp.asarray(probs)[None], y_arr,
                     jnp.asarray([reach], jnp.float32), w_one)
                 reach = np.float32(reach * np.float32(dp))
@@ -424,12 +468,13 @@ class OnlineCascade:
         self.total_cost += episode_cost_units
         self.level_counts[chosen_level if not expert_called
                           else len(self.levels)] += 1
-        self.history["level"].append(
-            len(self.levels) if expert_called else chosen_level)
-        self.history["pred"].append(prediction)
-        self.history["expert_called"].append(expert_called)
-        self.history["cost"].append(episode_cost_units)
-        self.history["J"].append(J_t)
+        if self.history is not None:
+            self.history["level"].append(
+                len(self.levels) if expert_called else chosen_level)
+            self.history["pred"].append(prediction)
+            self.history["expert_called"].append(expert_called)
+            self.history["cost"].append(episode_cost_units)
+            self.history["J"].append(J_t)
         return {
             "prediction": prediction,
             "level": chosen_level,
@@ -439,7 +484,7 @@ class OnlineCascade:
         }
 
     # -- conveniences ---------------------------------------------------
-    def run(self, stream, expert=None, log_every: int = 0) -> dict:
+    def run(self, stream, log_every: int = 0) -> dict:
         """Process an entire stream; returns summary metrics."""
         preds = np.zeros(len(stream), np.int32)
         for i, doc in enumerate(stream.docs):

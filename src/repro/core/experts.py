@@ -8,10 +8,29 @@
   offline on ground truth to stand in for a zero-shot LLM.  Used by the
   end-to-end example so the full pipeline (featurize -> students -> deferral
   -> expert forward -> online updates) exercises real compute.
+
+Async annotation interface (``submit``/``poll``)
+------------------------------------------------
+At serving scale the expert forward is the latency wall, so both experts
+expose a two-phase interface the batched engine's deferred-lane queue
+drives (core/batched.py ``max_delay``):
+
+  ``ticket = expert.submit(idxs, docs)``   # enqueue a batch annotation
+  ``labels = expert.poll(ticket)``         # block until done
+  ``expert.poll(ticket, block=False)``     # None while still in flight
+
+``SimulatedExpert`` resolves tickets inline (its labels are a table
+lookup — there is nothing to overlap).  ``ModelExpert`` runs the batched
+forward on a background thread, so the host-side expert compute overlaps
+the next tick's student compute; jitted JAX dispatch is thread-safe and
+releases the GIL while the device executes.  Either way the ticket for a
+given (idxs, docs) batch resolves to exactly the labels ``label_batch``
+would have returned synchronously — delay never changes annotations.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -23,6 +42,39 @@ from repro.data.streams import Stream
 from repro.models.students import (
     TinyTFSpec, tinytf_init, tinytf_loss, tinytf_predict)
 from repro.optim import adam
+
+
+class ExpertTicket:
+    """Handle for one in-flight batched annotation request.
+
+    Wraps either an already-resolved label array (synchronous experts) or
+    a ``concurrent.futures.Future`` producing one (thread-backed experts).
+    """
+
+    __slots__ = ("_labels", "_future")
+
+    def __init__(self, labels: Optional[np.ndarray] = None, future=None):
+        if (labels is None) == (future is None):
+            raise ValueError("exactly one of labels/future required")
+        self._labels = labels
+        self._future = future
+
+    def done(self) -> bool:
+        return self._future is None or self._future.done()
+
+    def result(self) -> np.ndarray:
+        if self._future is not None:
+            self._labels = np.asarray(self._future.result(), np.int32)
+            self._future = None
+        return self._labels
+
+
+def poll_ticket(ticket: ExpertTicket,
+                block: bool = True) -> Optional[np.ndarray]:
+    """Shared ``poll`` body: labels when ready, else None (non-blocking)."""
+    if not block and not ticket.done():
+        return None
+    return ticket.result()
 
 
 class SimulatedExpert:
@@ -40,6 +92,15 @@ class SimulatedExpert:
         batched engine routes all deferrals of a tick through this)."""
         return self._labels[np.asarray(idxs, np.int64)].astype(np.int32)
 
+    # -- async interface (resolved inline: a table lookup has no latency
+    #    to overlap, but the engine drives one code path for all experts)
+    def submit(self, idxs, docs) -> ExpertTicket:
+        return ExpertTicket(labels=self.label_batch(idxs, docs))
+
+    def poll(self, ticket: ExpertTicket,
+             block: bool = True) -> Optional[np.ndarray]:
+        return poll_ticket(ticket, block)
+
 
 @dataclass
 class ModelExpert:
@@ -48,6 +109,8 @@ class ModelExpert:
     spec: TinyTFSpec
     name: str = "model-expert"
     cost: float = 1.0e6
+    _executor: Optional[ThreadPoolExecutor] = field(
+        default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         spec = self.spec
@@ -67,6 +130,35 @@ class ModelExpert:
                         for d in docs])
         probs = self._predict(self.params, jnp.asarray(ids))
         return np.asarray(jnp.argmax(probs, axis=-1), np.int32)
+
+    # -- async interface: the batched forward runs on a worker thread, so
+    #    the expert's host+device time overlaps the engine's next-tick
+    #    student compute (one worker keeps submission order = completion
+    #    order, which the engine's FIFO queue relies on)
+    def submit(self, idxs, docs) -> ExpertTicket:
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix=self.name)
+        return ExpertTicket(
+            future=self._executor.submit(self.label_batch, list(idxs),
+                                         list(docs)))
+
+    def poll(self, ticket: ExpertTicket,
+             block: bool = True) -> Optional[np.ndarray]:
+        return poll_ticket(ticket, block)
+
+    def close(self) -> None:
+        """Reap the worker thread (long-lived processes that cycle
+        through many experts should call this; idempotent)."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+    def __del__(self):  # best-effort: don't leak the worker at GC
+        try:
+            self.close()
+        except Exception:
+            pass
 
 
 def train_model_expert(stream: Stream, n_classes: int,

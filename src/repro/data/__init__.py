@@ -1,7 +1,6 @@
-from repro.data.streams import (
-    StreamSpec, Stream, BENCHMARKS, make_stream, benchmark_spec,
-)
 from repro.data.features import hash_bow, hash_ids
+from repro.data.streams import (
+    BENCHMARKS, Stream, StreamSpec, benchmark_spec, make_stream)
 
 __all__ = ["StreamSpec", "Stream", "BENCHMARKS", "make_stream",
            "benchmark_spec", "hash_bow", "hash_ids"]

@@ -87,13 +87,29 @@ class Stream:
     lengths: np.ndarray
     _expert_cache: dict = field(default_factory=dict)
     seed: int = 0
+    # position -> index in the originally-generated corpus; identity for
+    # freshly generated streams, a permutation after reorder().  Expert
+    # annotation noise is drawn per ORIGINAL index, so the same doc gets
+    # the same simulated-LLM label in every stream order
+    orig_idx: Optional[np.ndarray] = None
 
     def __len__(self):
         return len(self.docs)
 
+    def _orig_idx(self) -> np.ndarray:
+        if self.orig_idx is None:
+            return np.arange(len(self.docs))
+        return self.orig_idx
+
     def expert_labels(self, expert: str) -> np.ndarray:
         """Simulated LLM annotations: ground truth corrupted at the paper's
-        per-dataset error rate, biased toward longer docs (Table 5)."""
+        per-dataset error rate, biased toward longer docs (Table 5).
+
+        The flip/wrong-class draws are tied to each doc's ORIGINAL corpus
+        index, not its stream position — a reordered stream (length /
+        category shift runs) annotates every doc identically to the
+        default order, so distribution-shift experiments compare the same
+        teacher on the same data, merely permuted."""
         if expert in self._expert_cache:
             return self._expert_cache[expert]
         spec = self.spec
@@ -111,9 +127,13 @@ class Stream:
         for _ in range(4):
             scale = (1.0 - acc) / max(np.mean(err), 1e-9)
             err = np.clip(err * scale, 0.0, 0.49)
-        flip = rng.random(len(self.docs)) < err
-        wrong = (self.labels + 1 + rng.integers(
-            0, spec.n_classes - 1, len(self.docs))) % spec.n_classes
+        # per-original-index draws (err itself is per-doc: a function of
+        # the doc's own length and the permutation-invariant corpus mean)
+        oi = self._orig_idx()
+        flip_u = rng.random(len(self.docs))
+        wrong_off = rng.integers(0, spec.n_classes - 1, len(self.docs))
+        flip = flip_u[oi] < err
+        wrong = (self.labels + 1 + wrong_off[oi]) % spec.n_classes
         out = np.where(flip, wrong, self.labels).astype(np.int32)
         self._expert_cache[expert] = out
         return out
@@ -137,6 +157,7 @@ class Stream:
             categories=self.categories[idx],
             lengths=self.lengths[idx],
             seed=self.seed,
+            orig_idx=self._orig_idx()[idx],
         )
 
 

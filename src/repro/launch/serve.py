@@ -51,17 +51,27 @@ def probe_route(cascade: OnlineCascade, doc, tick: int) -> bool:
     """Predict whether processing ``doc`` at ``tick`` would consult the
     expert, WITHOUT mutating cascade state.  The per-tick pre-split RNG
     discipline (core.rng) lets the probe reproduce the exact DAgger jump
-    draws the replay pass will see."""
+    draws — and, under ``cfg.sample_actions``, the exact sampled-action
+    draws — that the replay pass will see.  (The probe previously always
+    thresholded dprob at 0.5; with sampled actions that mispredicted the
+    route whenever the draw disagreed with the threshold, degrading the
+    micro-batch to single-call expert fallbacks.)"""
+    cfg = cascade.cfg
     n_levels = len(cascade.levels)
-    u_jump = tick_rngs(cascade.cfg.seed, cascade.stream_id, tick,
-                       n_levels).jump.random(n_levels)
+    rngs = tick_rngs(cfg.seed, cascade.stream_id, tick, n_levels)
+    u_jump = rngs.jump.random(n_levels)
+    u_act = rngs.action.random(n_levels) if cfg.sample_actions else None
     for i, lvl in enumerate(cascade.levels):
         if not cascade._budget_exhausted() and u_jump[i] < lvl.beta:
             return True                      # DAgger jump
         x = lvl.featurize(doc)
         _, dprob = lvl._predict_and_defer(
             lvl.params, lvl.dparams, jnp.asarray(x))
-        defer = float(dprob) > 0.5
+        if cfg.sample_actions:
+            # float32 comparison, identical to OnlineCascade.process
+            defer = float(np.float32(u_act[i])) < float(dprob)
+        else:
+            defer = float(dprob) > 0.5
         if cascade._budget_exhausted() and i == n_levels - 1:
             defer = False
         if not defer:
@@ -80,28 +90,37 @@ def _make_expert(stream, n_classes, expert_kind, samples, seed):
 def serve_stream_batched(dataset: str, samples: int, mu: float,
                          batch: int = 64, expert_kind: str = "model",
                          seed: int = 0, log_every: int = 500,
-                         mesh=None, updates_per_tick: str = "single"):
+                         mesh=None, updates_per_tick: str = "single",
+                         async_delay: int = 0):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
     shards the stream lanes over the mesh's ('pod','data') axes; the
     cascade state stays replicated.  ``updates_per_tick="scaled"``
     lr-scales the per-tick update by the number of expert demos, closing
-    the item-space adaptation gap of one-update-per-tick batching."""
+    the item-space adaptation gap of one-update-per-tick batching.
+    ``async_delay >= 1`` overlaps the expert forward with the next ticks'
+    student compute (deferred lanes answer provisionally; annotations
+    land within that many ticks — core/batched.py ``max_delay``)."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
                           samples, seed)
     cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
                                  seed=seed, expert_cost=expert.cost)
+    # history_limit=0: the serving loop only reads aggregate metrics, so
+    # per-item history would grow without bound on long streams
     engine = BatchedCascadeEngine(cfg, expert, n_streams=batch, mesh=mesh,
-                                  updates_per_tick=updates_per_tick)
+                                  updates_per_tick=updates_per_tick,
+                                  max_delay=async_delay, history_limit=0)
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
     dt = time.time() - t0
     frac = metrics["expert_calls"] / len(stream)
     lanes = (f"batch={batch}" if mesh is None else
              f"batch={batch} mesh={dict(mesh.shape)}")
+    if async_delay:
+        lanes += f" async_delay={async_delay}"
     print(f"\nserved {len(stream)} queries in {dt:.1f}s "
           f"({metrics['items_per_sec']:.0f} items/s, {lanes})")
     print(f"accuracy={metrics['accuracy']:.4f}  "
@@ -124,7 +143,7 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
     proxy = _BatchProxy(expert)
     cfg = default_cascade_config(n_classes=n_classes, mu=mu, seed=seed,
                                  expert_cost=expert.cost)
-    cascade = OnlineCascade(cfg, proxy)
+    cascade = OnlineCascade(cfg, proxy, history_limit=0)
 
     preds = np.zeros(len(stream), np.int32)
     t0 = time.time()
@@ -153,6 +172,10 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
         for k in batch_idx:
             out = cascade.process(k, stream.docs[k])
             preds[k] = out["prediction"]
+        # the replayed micro-batch's precomputed labels are spent — prune
+        # them so the proxy table stays O(microbatch), not O(stream)
+        for k in batch_idx:
+            proxy.table.pop(k, None)
         i = j
         if log_every and i % max(log_every, microbatch) < microbatch:
             acc = float(np.mean(preds[:i] == stream.labels[:i]))
@@ -196,6 +219,11 @@ def main():
                     help="per-tick update scheduling (batched engine): "
                          "'scaled' lr-scales the one weighted step by "
                          "the tick's expert-demo count")
+    ap.add_argument("--async-delay", type=int, default=0,
+                    help="bounded annotation delay in ticks (batched "
+                         "engine): >=1 overlaps the expert forward with "
+                         "student compute; 0 = synchronous (bit-exact "
+                         "reference semantics)")
     ap.add_argument("--microbatch", type=int, default=16,
                     help="expert micro-batch (sequential engine)")
     ap.add_argument("--expert", default="model",
@@ -208,7 +236,8 @@ def main():
                              batch=args.batch, expert_kind=args.expert,
                              seed=args.seed,
                              mesh=parse_mesh_spec(args.mesh),
-                             updates_per_tick=args.updates)
+                             updates_per_tick=args.updates,
+                             async_delay=args.async_delay)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed)

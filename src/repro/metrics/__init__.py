@@ -1,10 +1,8 @@
 from repro.metrics.costs import (
-    lr_flops, tinytf_flops, expert_prefill_flops, expert_decode_flops,
-    relative_costs, CostModel,
-)
+    CostModel, expert_decode_flops, expert_prefill_flops, lr_flops,
+    relative_costs, tinytf_flops)
 from repro.metrics.roofline import (
-    HW, V5E, roofline_terms, parse_collective_bytes, model_flops_6nd,
-)
+    HW, V5E, model_flops_6nd, parse_collective_bytes, roofline_terms)
 
 __all__ = [
     "lr_flops", "tinytf_flops", "expert_prefill_flops",

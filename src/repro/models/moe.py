@@ -17,23 +17,23 @@ Aux losses (load-balance + router-z) are returned for the training objective.
 """
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, trunc_normal
 from repro import sharding as shd
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.layers import dense_init, trunc_normal
 
 try:  # jax >= 0.6 moved shard_map to the top level
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
-from jax.sharding import PartitionSpec as P
-
-import inspect
 
 # jax >= 0.6 renamed check_rep -> check_vma; pass whichever this jax has
 # (without the flag, unreduced-psum replication checks reject the body)
@@ -105,8 +105,6 @@ def _expert_ffn(inp, params, cfg: ModelConfig):
     h = jax.nn.silu(g) * h
     return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
 
-
-from repro.models import flags
 
 MOE_GROUP = 2048  # tokens per dispatch group (GShard 'group size')
 

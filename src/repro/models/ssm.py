@@ -15,8 +15,6 @@ Layout (n_groups = 1):
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -20,7 +20,6 @@ Both expose the same functional interface:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ from repro.models.layers import (
     apply_mlp, apply_norm, dense_init, embed, init_embed, init_lm_head,
     init_mlp, init_norm, lm_logits, rms_norm_headwise, softmax_xent)
 from repro.models.moe import init_moe, moe_ffn
-from repro.sharding import constrain, constrain_tokens, batch_axes
+from repro.sharding import batch_axes, constrain, constrain_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -471,7 +471,6 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
 def cache_struct(cfg: ModelConfig, batch: int, cache_len: int,
                  memory_len: int = 0):
     """ShapeDtypeStruct pytree matching what ``prefill`` would emit."""
-    import numpy as np
     P = cfg.n_periods
     dt = cfg.jnp_dtype
     a = cfg.attn

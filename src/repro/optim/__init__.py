@@ -1,6 +1,6 @@
 from repro.optim.optimizers import (
-    Optimizer, sgd, momentum, adam, adamw, ogd_sqrt_t, clip_by_global_norm,
-)
+    Optimizer, adam, adamw, clip_by_global_norm, momentum, ogd_sqrt_t,
+    sgd)
 
 __all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw", "ogd_sqrt_t",
            "clip_by_global_norm"]

@@ -114,7 +114,8 @@ def _adam_like(lr, b1, b2, eps, weight_decay, clip, state_dtype, name):
     sdt = jnp.dtype(state_dtype)
 
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, sdt)
+        def z(p):
+            return jnp.zeros(p.shape, sdt)
         return {"count": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params)}

@@ -69,8 +69,10 @@ except ValueError:
 base = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
                             n_streams=S)
 m0 = base.run(stream)
+# max_delay=0 explicitly: the async-capable route/commit engine must be
+# bit-identical to the synchronous reference on the mesh too
 shard = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=S, mesh=mesh)
+                             n_streams=S, mesh=mesh, max_delay=0)
 m1 = shard.run(stream)
 
 # same tick keys => identical routing decisions and expert usage
@@ -103,6 +105,16 @@ shard.reset()
 m3 = shard.run(stream2)
 assert len(m3["predictions"]) == 100
 assert int(shard.items_seen.sum()) == 100
+
+# async bounded-delay serving on the mesh: same warmed engine (the jits
+# are delay-independent), annotations land within 2 ticks, the queue
+# drains at stream end, and every item is served exactly once
+shard.max_delay = 2
+shard.reset()
+m4 = shard.run(stream)
+assert len(shard._pending) == 0
+assert int(shard.items_seen.sum()) == n
+assert m4["expert_calls"] > 0
 print("SHARDED-PARITY-OK")
 """
 
