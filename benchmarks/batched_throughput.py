@@ -26,8 +26,6 @@ from __future__ import annotations
 import time
 from dataclasses import replace
 
-import numpy as np
-
 
 def _time_run(engine, stream) -> float:
     t0 = time.time()

@@ -1,0 +1,218 @@
+"""Pipelined route passes: does ``pipeline_depth >= 1`` actually hide
+host featurization/routing behind device compute?
+
+The unpipelined engine syncs every tick: featurize on the host, dispatch
+the level-0 forward, then *block* on dprob before routing — the device
+idles through every featurization and the host idles through every
+forward.  The pipelined engine (core/batched.py ``pipeline_depth``)
+keeps a P-deep ring of dispatched ticks, so tick t+1's host work runs
+while tick t's forward and D2H transfer are still in flight.
+
+Two regimes, same stream/seed:
+
+* ``converged`` — the single-exit steady state the ROADMAP calls out: a
+  deep dense (MLP) student serves every lane, no expert traffic and no
+  updates (``hard_budget=0`` suppresses jumps), so ticks are independent
+  and speculation never fences.  This is where the pipeline pays.
+* ``learning`` — expert calls and updates active.  Every committing tick
+  fences or refetches (results stay exact), so the pipeline degenerates
+  to the synchronous engine; reported honestly alongside the engine's
+  ``pipeline_stats``.
+
+Measurement methodology (small shared-core hosts):
+
+* wall-clock items/sec per depth is timed INTERLEAVED against depth 0
+  (alternating repetitions, median of paired ratios) so load drift
+  cancels.  On a 2-core container the "device" (XLA CPU threadpool) and
+  the host loop compete for the same cores, so measured overlap
+  under-reports what a real accelerator realizes;
+* the ``projected`` figure decomposes one unpipelined tick into its
+  blocking jit roundtrip t_jit (the level-0 forward + transfer) and the
+  host remainder t_host (featurize, RNG, masks, accounting), and
+  projects the perfectly-overlapped tick a device-parallel host
+  realizes:
+
+      projected_speedup = (t_host + t_jit) / max(t_host, t_jit)
+
+  Both numbers are always printed.
+
+CSV convention: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+
+def _converged_config(n_classes: int, seed: int):
+    """Single dense-MLP level, no expert traffic: the post-closure
+    steady state (the sharded_throughput construction, sized so the
+    level-0 forward and the host work per tick are comparable — the
+    regime where hiding one behind the other is worth a near-2x)."""
+    from repro.core import default_cascade_config
+    from repro.core.cascade import LevelSpec
+    from repro.models.students import MLPSpec
+    base = default_cascade_config(n_classes=n_classes, mu=3e-7, seed=seed)
+    mlp_level = LevelSpec(kind="mlp", cost=120.0, cache_size=32,
+                          batch_size=16, student_lr=1e-3, beta_decay=0.95,
+                          calibration_factor=0.3)
+    return replace(base, levels=(mlp_level,), hard_budget=0,
+                   mlp_spec=MLPSpec(hidden=512, n_layers=3))
+
+
+def _learning_config(n_classes: int, seed: int):
+    """Default cascade with slow DAgger decay: updates stay active."""
+    from repro.core import default_cascade_config
+    base = default_cascade_config(n_classes=n_classes, mu=3e-7, seed=seed)
+    return replace(base, levels=tuple(
+        replace(lvl, beta_decay=0.995) for lvl in base.levels))
+
+
+def _warm_engine(cfg, stream, expert, batch, depth):
+    from repro.core import BatchedCascadeEngine
+    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch,
+                                  pipeline_depth=depth)
+    engine.run(stream)              # compile + warm every jitted step
+    engine.reset()
+    return engine
+
+
+def _paired_rates(cfg, stream, make_expert, batch, depth, reps):
+    """Interleaved wall-clock: depth-0 vs depth-P, median of paired
+    ratios so machine-load drift cancels."""
+    e0 = _warm_engine(cfg, stream, make_expert(), batch, 0)
+    eP = _warm_engine(cfg, stream, make_expert(), batch, depth)
+    n = len(stream)
+    r0s, rPs, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.time()
+        e0.run(stream)
+        a = n / (time.time() - t0)
+        e0.reset()
+        t0 = time.time()
+        mP = eP.run(stream)
+        b = n / (time.time() - t0)
+        stats = dict(eP.pipeline_stats)
+        eP.reset()
+        r0s.append(a)
+        rPs.append(b)
+        ratios.append(b / a)
+    del mP
+    return {
+        "depth": depth,
+        "depth0_items_per_sec": float(np.median(r0s)),
+        f"depth{depth}_items_per_sec": float(np.median(rPs)),
+        "wall_speedup": float(np.median(ratios)),
+        "pipeline_stats": stats,
+    }, e0
+
+
+def _projection(e0, stream, batch, reps):
+    """Decompose one unpipelined converged tick into the blocking jit
+    roundtrip and the host remainder; project the overlapped tick."""
+    lvl = e0.levels[0]
+    n = len(stream)
+    fi = np.stack([lvl.featurize(stream.docs[i]) for i in range(batch)])
+    pd = e0._predict_defer[0]
+    xb = e0._put_lane(fi)
+    pd(lvl.params, lvl.dparams, xb)[0].block_until_ready()
+
+    def jit_roundtrip(calls=8):
+        t0 = time.time()
+        for _ in range(calls):
+            probs, dprob = pd(lvl.params, lvl.dparams, xb)
+            np.asarray(probs), np.asarray(dprob)   # D2H, like routing
+        return (time.time() - t0) / calls
+
+    jits, ticks = [], []
+    for _ in range(max(reps, 5)):
+        jits.append(jit_roundtrip())
+        t0 = time.time()
+        e0.run(stream)
+        ticks.append((time.time() - t0) / (n / batch))
+        e0.reset()
+    t_jit = float(np.median(jits))
+    t_tick = float(np.median(ticks))
+    t_host = max(t_tick - t_jit, 0.0)
+    projected = (t_host + t_jit) / max(t_host, t_jit, 1e-12)
+    return {
+        "t_jit_ms": t_jit * 1e3,
+        "t_host_ms": t_host * 1e3,
+        "t_tick_ms": t_tick * 1e3,
+        "projected_speedup": float(projected),
+    }
+
+
+def run(samples: int = 512, seed: int = 0, batch: int = 32,
+        dataset: str = "hatespeech", depths=(1, 2),
+        quick: bool = False) -> dict:
+    """Measure converged-regime pipelined throughput + honest learning-
+    regime behavior; returns a dict with per-depth rows and the
+    device-parallel projection."""
+    from repro.core import SimulatedExpert
+    from repro.data import make_stream
+
+    if quick:
+        samples = min(samples, 256)
+        depths = tuple(d for d in depths if d <= 1)
+    reps = 3 if quick else 5
+    stream = make_stream(dataset, seed=seed, n_samples=samples)
+    n_classes = stream.spec.n_classes
+
+    def make_expert():
+        return SimulatedExpert(stream, "gpt-3.5-turbo")
+
+    out = {"samples": samples, "batch": batch}
+
+    conv_cfg = _converged_config(n_classes, seed)
+    conv_rows = []
+    e0 = None
+    for d in depths:
+        row, e0 = _paired_rates(conv_cfg, stream, make_expert, batch, d,
+                                reps)
+        conv_rows.append(row)
+        st = row["pipeline_stats"]
+        assert st["refetches"] == 0 and st["update_fences"] == 0, (
+            "converged regime must never fence")
+        print(f"[pipelined_throughput] converged depth={d} "
+              f"{row[f'depth{d}_items_per_sec']:8.1f} it/s vs depth0 "
+              f"{row['depth0_items_per_sec']:8.1f} it/s "
+              f"(wall {row['wall_speedup']:.2f}x)")
+    proj = _projection(e0, stream, batch, reps)
+    print(f"[pipelined_throughput] converged projected on a "
+          f"device-parallel host: {proj['projected_speedup']:.2f}x "
+          f"(t_jit {proj['t_jit_ms']:.1f}ms + t_host "
+          f"{proj['t_host_ms']:.1f}ms per tick; wall-clock on this "
+          f"core-starved host is reported above, honestly)")
+    out["converged"] = {"rows": conv_rows, **proj}
+
+    learn_cfg = _learning_config(n_classes, seed)
+    lrow, _ = _paired_rates(learn_cfg, stream, make_expert, batch,
+                            max(depths), reps)
+    st = lrow["pipeline_stats"]
+    print(f"[pipelined_throughput] learning  depth={lrow['depth']} "
+          f"wall {lrow['wall_speedup']:.2f}x — updates force a sync "
+          f"(refetches={st['refetches']} "
+          f"update_fences={st['update_fences']} of "
+          f"{st['submitted']} ticks); exactness preserved, overlap "
+          f"honestly ~1x")
+    out["learning"] = lrow
+
+    out["headline_wall_speedup"] = max(
+        r["wall_speedup"] for r in conv_rows)
+    out["headline_projected_speedup"] = proj["projected_speedup"]
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(samples=args.samples, seed=args.seed, batch=args.batch,
+        quick=args.quick)

@@ -26,9 +26,9 @@ def main() -> None:
 
     from benchmarks import (async_throughput, batched_throughput,
                             case_analysis, cost_equilibrium,
-                            distribution_shift, prefill_cost, regret,
-                            roofline_report, sharded_throughput, table1,
-                            tradeoff_curves)
+                            distribution_shift, pipelined_throughput,
+                            prefill_cost, regret, roofline_report,
+                            sharded_throughput, table1, tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -52,6 +52,14 @@ def main() -> None:
         record("async_throughput", t0,
                f"padded_overlap="
                f"{at['headline_overlap_speedup']:.2f}x")
+
+    if "pipelined" not in args.skip:
+        t0 = time.time()
+        pt = pipelined_throughput.run(samples=min(n, 512), seed=args.seed,
+                                      quick=quick)
+        record("pipelined_throughput", t0,
+               f"converged_wall={pt['headline_wall_speedup']:.2f}x_"
+               f"projected={pt['headline_projected_speedup']:.2f}x")
 
     if "sharded" not in args.skip:
         t0 = time.time()

@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 from benchmarks.common import (
     EXPERTS, run_cascade, run_distill, run_ensemble, save_json)
 

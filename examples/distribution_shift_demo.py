@@ -8,8 +8,6 @@ online in each case.
 """
 import argparse
 
-import numpy as np
-
 from repro.core import OnlineCascade, SimulatedExpert, default_cascade_config
 from repro.data import make_stream
 

@@ -9,7 +9,6 @@ core, minutes on real accelerators).
   PYTHONPATH=src python examples/train_expert_lm.py --steps 30
 """
 import argparse
-import dataclasses
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ATTN, AttnConfig, ModelConfig, register

@@ -1,3 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
 
 __all__ = ["save_checkpoint", "restore_checkpoint"]

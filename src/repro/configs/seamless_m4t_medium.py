@@ -7,7 +7,7 @@ sanctioned stub — ``input_specs`` supplies precomputed frame embeddings.
 Decoder layers carry self + cross attention (CROSS block kind).
 """
 from repro.configs.base import (
-    ATTN, CROSS, AttnConfig, EncoderConfig, ModelConfig, register)
+    CROSS, AttnConfig, EncoderConfig, ModelConfig, register)
 
 CONFIG = register(
     ModelConfig(

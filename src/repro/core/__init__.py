@@ -1,4 +1,9 @@
-# The paper's primary contribution: online cascade learning (Alg. 1).
+"""The paper's primary contribution: online cascade learning (Alg. 1).
+
+Public surface: the sequential reference ``OnlineCascade``, the
+serving-scale ``BatchedCascadeEngine`` (batched / sharded / async /
+pipelined), the deferral-gate math, and the expert implementations.
+"""
 from repro.core.batched import BatchedCascadeEngine
 from repro.core.cascade import (
     CascadeConfig, LevelSpec, OnlineCascade, default_cascade_config)

@@ -148,6 +148,68 @@ on identical tick keys — identical predictions, levels, and expert
 calls; parameters agree to float tolerance (SPMD reassociates the
 weighted-update reductions).  tests/test_sharded.py asserts this on an
 8-virtual-device mesh; benchmarks/sharded_throughput.py measures it.
+
+Pipelined route passes (``pipeline_depth=``)
+--------------------------------------------
+Even with the expert off the critical path (``max_delay``), the route
+pass itself still syncs per level per tick: host routing needs ``dprob``
+back from the device before it knows which lanes survive to the next
+level, so the host blocks on every tick's first forward while the device
+idles through every tick's featurization.  ``pipeline_depth=P >= 1``
+overlaps them with a P-deep ring of in-flight ticks:
+
+  dispatch (stage A, ``submit_tick``)
+    * tick t+1's jump draws, masks, and level-0 featurization run on the
+      host, and its level-0 batched forward (featurize -> ``put_lanes``
+      -> jitted predict+defer) is *dispatched* — JAX async dispatch
+      returns device futures without blocking — while tick t's dprob
+      device->host transfer and host routing are still resolving.
+      ``sharding.host_prefetch`` enqueues the D2H copy of the in-flight
+      (probs, dprob) pair behind its producing computation, so by the
+      time the ring resolves a tick its route outputs are already on the
+      host.  Only level 0 can be pre-dispatched: deeper levels' gather
+      masks depend on the tick's own earlier dprobs (the cascade's
+      sequential structure), but in the converged single-exit regime
+      level 0 is the whole tick — exactly where the sync hurt.
+  resolve (stage B, FIFO)
+    * the oldest in-flight tick blocks on its level-0 handles, walks the
+      remaining levels (dispatch+sync per level, as before), submits
+      deferred lanes to the expert, and commits due annotations — the
+      identical op sequence as the unpipelined engine, in tick order.
+
+Speculation discipline (what makes P > 0 *exact*, not approximate):
+
+  * jump draws, sampled actions, and cache RNG are pre-split per tick
+    (core.rng) — dispatch order cannot shift them;
+  * beta decay is deterministic in items-seen, so stage A advances a
+    route-time beta copy (``_route_beta``) through the identical
+    recurrence the resolve-time state follows;
+  * **update ticks fence the pipeline**: a dispatched forward reads the
+    params live at dispatch.  If a commit is already known to be due
+    while the ring drains (the pending queue holds a tick whose D-tick
+    delay expires before the newly submitted tick routes), ``submit_tick``
+    resolves past it first (``pipeline_stats["update_fences"]``).  A
+    commit that only becomes known later — an in-flight tick turns out
+    to call the expert at ``max_delay=0`` — is caught at resolve by a
+    state-version check and the level-0 forward is *refetched* against
+    the committed params (``pipeline_stats["refetches"]``; the
+    featurization, which is parameter-independent, is reused).  Hard
+    budgets quench speculation only inside the ambiguous window
+    (``pipeline_stats["budget_fences"]``): far from the budget edge the
+    jump gate's budget bit is provably stable.
+
+Consequence: any ``pipeline_depth`` produces identical predictions,
+chosen levels, expert-call decisions, parameters and optimizer state on
+identical tick keys — only wall-clock differs (tests/test_pipelined.py
+pins this, including composition with ``max_delay`` and the mesh).
+``pipeline_depth=0`` (default) keeps today's one-tick-at-a-time
+``process_tick`` path bit-for-bit.  In the learning regime every tick
+commits, so the pipeline degenerates to the synchronous engine (fence
+per tick) — the speedup lives in the converged regime, which is where
+serving spends its life (benchmarks/pipelined_throughput.py measures
+both honestly).  Pipelined serving is driven through
+``submit_tick``/``resolve_tick``/``drain`` (``run`` does); a tick's
+results return when it resolves, at most P ticks after submission.
 """
 from __future__ import annotations
 
@@ -161,9 +223,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cascade import CascadeConfig, _Level, make_history
-from repro.core.deferral import deferral_prob, reexploration_floor
+from repro.core.deferral import reexploration_floor
 from repro.core.experts import ExpertTicket
 from repro.core.rng import sample_cache_indices, tick_rngs
+from repro.sharding import host_prefetch, jit_route_pass
 
 
 @dataclass
@@ -185,6 +248,33 @@ class _PendingTick:
     cache_rngs: list              # per-level np generators (lane-0 tick)
 
 
+@dataclass
+class _InFlightTick:
+    """One dispatched-but-unresolved tick of the route pipeline.
+
+    Created by stage A (``_route_dispatch``): the tick's pre-split RNG
+    draws, jump mask, level-0 featurization, and the level-0 forward's
+    un-synced device handles.  Stage B (``_route_resolve``) turns it into
+    the tick's output dict; ``version`` records the engine's commit
+    counter at dispatch so a commit landing in between is detected and
+    the speculated forward refetched."""
+
+    t: int                        # tick number assigned at dispatch
+    indices: List[int]            # per-lane stream indices
+    docs: list                    # per-lane raw docs
+    S: int                        # lanes in this tick (<= n_streams)
+    jump: np.ndarray              # (nlev, S) bool DAgger jump mask
+    u_act: np.ndarray             # (nlev, S) float32 sampled-action draws
+    budget_ok: bool               # route-time budget gate (fence-stable)
+    cache_rngs: list              # per-level cache-sampling generators
+    feats_cache: list             # per-level lazily built feature rows
+    sel0: np.ndarray              # lanes alive at level 0 (post-jump)
+    xb0: Optional[np.ndarray]     # padded level-0 host feature batch
+    handles: Optional[tuple]      # in-flight (probs, dprob) device pair
+    version: int                  # engine commit counter at dispatch
+    beta_after: List[float]       # per-level beta after this tick's decay
+
+
 class BatchedCascadeEngine:
     """Lockstep multi-stream driver for Algorithm 1.
 
@@ -195,7 +285,7 @@ class BatchedCascadeEngine:
 
     def __init__(self, config: CascadeConfig, expert, n_streams: int = 64,
                  *, updates_per_tick: str = "single", mesh=None,
-                 max_delay: int = 0,
+                 max_delay: int = 0, pipeline_depth: int = 0,
                  history_limit: Optional[int] = None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
@@ -205,11 +295,15 @@ class BatchedCascadeEngine:
                 f"got {updates_per_tick!r}")
         if max_delay < 0:
             raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        if pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth}")
         self.cfg = config
         self.expert = expert
         self.n_streams = n_streams
         self.updates_per_tick = updates_per_tick
         self.max_delay = int(max_delay)
+        self.pipeline_depth = int(pipeline_depth)
         self.mesh = mesh
         if mesh is not None:
             from repro.sharding import (lane_count, put_lanes,
@@ -268,6 +362,17 @@ class BatchedCascadeEngine:
         # double-buffered deferred-lane queue: routed ticks whose expert
         # annotations are still in flight (at most max_delay + 1 deep)
         self._pending: deque = deque()
+        # route pipeline: dispatched-but-unresolved ticks (<= pipeline_depth
+        # deep), the speculative route-time beta/item counters that track
+        # the resolve-time state through the identical recurrence, and the
+        # commit counter the staleness check reads
+        self._ring: deque = deque()
+        self._route_beta: List[float] = [config.beta0] * nlev
+        self._route_items = 0
+        self._state_version = 0
+        self.pipeline_stats = {"submitted": 0, "resolved": 0,
+                               "refetches": 0, "update_fences": 0,
+                               "budget_fences": 0}
         self._build_steps()
 
     def reset(self):
@@ -291,12 +396,20 @@ class BatchedCascadeEngine:
         if self.history is not None:
             for v in self.history.values():
                 v.clear()
-        # in-flight annotations belong to the abandoned stream
+        # in-flight annotations and route dispatches belong to the
+        # abandoned stream
         self._pending.clear()
+        self._ring.clear()
+        self._route_beta = [self.cfg.beta0] * len(self.levels)
+        self._route_items = 0
+        self._state_version += 1
+        for k in self.pipeline_stats:
+            self.pipeline_stats[k] = 0
 
     # -- aggregates -----------------------------------------------------
     @property
     def expert_calls_total(self) -> int:
+        """Expert calls summed over lanes (resolved ticks only)."""
         return int(self.expert_calls.sum())
 
     def _budget_exhausted(self) -> bool:
@@ -311,15 +424,14 @@ class BatchedCascadeEngine:
                    for lvl in levels]
 
         # per-level batched predict + defer over the gathered alive
-        # subset; at a (1, ...) batch this is the reference's
-        # ``predict_and_defer`` computation exactly
-        def make_predict_defer(lvl):
-            def predict_defer(params, dparams, xb):
-                probs = lvl._predict_batch(params, xb)
-                return probs, deferral_prob(dparams, probs)
-            return jax.jit(predict_defer)
-
-        self._predict_defer = [make_predict_defer(lvl) for lvl in levels]
+        # subset (the level's ``route_pass`` body — at a (1, ...) batch
+        # this is the reference's ``predict_and_defer`` computation
+        # exactly).  In pipelined mode on a mesh the padded lane feature
+        # buffer is donated: each in-flight tick's input is consumed
+        # exactly once by its dispatch (sharding.jit_route_pass)
+        donate_mesh = self.mesh if self.pipeline_depth else None
+        self._predict_defer = [jit_route_pass(lvl.route_pass, donate_mesh)
+                               for lvl in levels]
 
         def scatter(cx_t, cy_t, feats_t, y_full, called, ptr_arr):
             """Vectorized ring-buffer insert of a tick's demonstrations."""
@@ -387,7 +499,95 @@ class BatchedCascadeEngine:
     # -- one lockstep tick ----------------------------------------------
     def process_tick(self, indices: Sequence[int], docs) -> dict:
         """Advance every lane by one item.  len(docs) may be < n_streams
-        on the final partial tick of a stream."""
+        on the final partial tick of a stream.
+
+        This is the depth-0 path: dispatch and resolve run back to back,
+        so the returned dict is always this tick's own result — bitwise
+        the pre-pipeline engine regardless of ``pipeline_depth``.
+        Pipelined serving (results returned up to P ticks late, route
+        passes overlapped) is driven through ``submit_tick``/
+        ``resolve_tick``/``drain`` instead; mixing the two while ticks
+        are in flight is an error."""
+        if self._ring:
+            raise RuntimeError(
+                "route pipeline has in-flight ticks: resolve_tick()/"
+                "drain() them first, or drive the engine entirely "
+                "through submit_tick()")
+        return self._route_resolve(self._route_dispatch(indices, docs))
+
+    # -- pipelined route driver (stage A / stage B) ----------------------
+    def submit_tick(self, indices: Sequence[int], docs) -> List[dict]:
+        """Dispatch one tick into the route pipeline (stage A).
+
+        Returns the output dicts of every tick the call resolved, oldest
+        first: ring overflow past ``pipeline_depth``, plus any ticks
+        resolved early by a fence (a due commit, or a hard budget inside
+        its ambiguous window — see the module docstring).  With
+        ``pipeline_depth=0`` the submitted tick itself resolves
+        immediately, so exactly one dict comes back."""
+        outs: List[dict] = []
+        S = len(docs)
+        hb = self.cfg.hard_budget
+        if hb is not None and self._ring:
+            resolved_calls = self.expert_calls_total
+            in_flight = sum(r.S for r in self._ring)
+            if resolved_calls < hb and resolved_calls + in_flight + S > hb:
+                # ambiguous budget window: the new tick's jump gate can
+                # no longer be proven stable against in-flight expert
+                # calls — drain so it reads the exact call count
+                self.pipeline_stats["budget_fences"] += 1
+                while self._ring:
+                    outs.append(self._route_resolve(self._ring.popleft()))
+        while (self._ring and self._pending
+               and self._pending[0].t + self.max_delay <= self.t):
+            # a commit is due while the ring drains: dispatching now is
+            # guaranteed stale — resolve past the commit first
+            self.pipeline_stats["update_fences"] += 1
+            outs.append(self._route_resolve(self._ring.popleft()))
+        self._ring.append(self._route_dispatch(indices, docs))
+        while len(self._ring) > self.pipeline_depth:
+            outs.append(self._route_resolve(self._ring.popleft()))
+        return outs
+
+    def resolve_tick(self) -> Optional[dict]:
+        """Resolve the oldest in-flight tick (stage B); None if empty."""
+        if not self._ring:
+            return None
+        return self._route_resolve(self._ring.popleft())
+
+    def drain(self) -> List[dict]:
+        """Resolve every in-flight tick, oldest first (stream end /
+        before checkpointing; ``run`` calls it before ``flush``)."""
+        outs = []
+        while self._ring:
+            outs.append(self._route_resolve(self._ring.popleft()))
+        return outs
+
+    def _dispatch_level(self, i: int, fi: np.ndarray, sel: np.ndarray):
+        """Pad the gathered lane subset ``fi[sel]`` to its bucket and
+        dispatch the level-i route pass (async — no host sync).
+
+        Returns ``(handles, xb)``: the in-flight (probs, dprob) device
+        pair and the padded host batch (kept by stage A for refetch).
+        Shared by the stage-A dispatch, the stage-B walk, and the
+        every-gate calibration forwards so the pad/bucket/placement rule
+        cannot drift between them."""
+        lvl = self.levels[i]
+        B = self._bucket(sel.size)
+        xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
+        xb[:sel.size] = fi[sel]
+        handles = self._predict_defer[i](lvl.params, lvl.dparams,
+                                         self._put_lane(xb))
+        return handles, xb
+
+    def _route_dispatch(self, indices: Sequence[int],
+                        docs) -> _InFlightTick:
+        """Stage A: draws, masks, level-0 featurize + async dispatch.
+
+        Everything here is either deterministic in the tick number
+        (pre-split RNG, the route-time beta recurrence) or covered by a
+        fence/staleness check (budget bit, level-0 params) — see the
+        module docstring's speculation discipline."""
         cfg = self.cfg
         nlev = len(self.levels)
         S = len(docs)
@@ -395,18 +595,13 @@ class BatchedCascadeEngine:
             raise ValueError(f"tick of {S} items > n_streams={self.n_streams}")
         self.t += 1
         t = self.t
+        self.pipeline_stats["submitted"] += 1
 
         # lazy per-level featurization: a level's feature batch is only
         # built if some lane actually reaches it (mirrors the reference's
         # per-item feat() cache; in a cheap-level-dominant steady state
         # the expensive levels' featurizers never run)
         feats_cache: list = [None] * nlev
-
-        def feats(i):
-            if feats_cache[i] is None:
-                feats_cache[i] = np.stack(
-                    [self.levels[i].featurize(d) for d in docs])
-            return feats_cache[i]
 
         u_jump = np.empty((nlev, S))
         u_act = np.empty((nlev, S), np.float32)
@@ -419,8 +614,80 @@ class BatchedCascadeEngine:
                 cache_rngs = r.cache
 
         budget_ok = not self._budget_exhausted()
-        betas = np.array([lvl.beta for lvl in self.levels])[:, None]
+        betas = np.array(self._route_beta)[:, None]
         jump = (u_jump < betas) & budget_ok
+
+        # level 0 is the only forward whose gather mask is known before
+        # any dprob returns (lanes alive there = lanes that didn't jump);
+        # dispatch it without blocking and start the D2H copy of its
+        # outputs so stage B's np.asarray is a wait, not a round trip
+        sel0 = np.flatnonzero(~jump[0])
+        xb0 = None
+        handles = None
+        if sel0.size:
+            fi = np.stack([self.levels[0].featurize(d) for d in docs])
+            feats_cache[0] = fi
+            handles, xb0 = self._dispatch_level(0, fi, sel0)
+            host_prefetch(handles)
+
+        # beta decays per consumed ITEM (decay^S per tick): the students
+        # are shared across lanes, so the DAgger exploration budget is
+        # measured in demonstrations seen, matching the reference's
+        # schedule in item-space (identical at S == 1).  The
+        # re-exploration floor (core.deferral) is applied once per tick
+        # at the post-tick item count.  The recurrence is deterministic
+        # in items seen, so it advances HERE, at dispatch (tick sizes
+        # are known) — ``lvl.beta`` is synced to the same value when the
+        # tick resolves, keeping the observable state identical to the
+        # unpipelined engine without a second copy of the schedule.
+        self._route_items += S
+        for i, lvl in enumerate(self.levels):
+            self._route_beta[i] = max(
+                self._route_beta[i] * lvl.spec.beta_decay ** S,
+                reexploration_floor(lvl.spec.beta_floor, self._route_items))
+
+        return _InFlightTick(
+            t=t, indices=[int(i) for i in indices], docs=list(docs), S=S,
+            jump=jump, u_act=u_act, budget_ok=budget_ok,
+            cache_rngs=cache_rngs, feats_cache=feats_cache, sel0=sel0,
+            xb0=xb0, handles=handles, version=self._state_version,
+            beta_after=list(self._route_beta))
+
+    def _route_resolve(self, rec: _InFlightTick) -> dict:
+        """Stage B: host routing, expert submit, commits, accounting.
+
+        Runs the unpipelined engine's op sequence for tick ``rec.t``
+        exactly, in FIFO tick order; the only pipelined difference is
+        that the level-0 forward was dispatched earlier (and is refetched
+        here if a commit landed since)."""
+        cfg = self.cfg
+        nlev = len(self.levels)
+        S = rec.S
+        t = rec.t
+        docs = rec.docs
+        u_act = rec.u_act
+        jump = rec.jump
+        budget_ok = rec.budget_ok
+        cache_rngs = rec.cache_rngs
+        feats_cache = rec.feats_cache
+        self.pipeline_stats["resolved"] += 1
+
+        def feats(i):
+            if feats_cache[i] is None:
+                feats_cache[i] = np.stack(
+                    [self.levels[i].featurize(d) for d in docs])
+            return feats_cache[i]
+
+        handles = rec.handles
+        if handles is not None and rec.version != self._state_version:
+            # a commit landed after this tick's dispatch: the speculated
+            # level-0 forward read pre-update params.  Refetch against
+            # the committed state (featurization is parameter-independent
+            # and is reused; only the jitted forward re-runs)
+            self.pipeline_stats["refetches"] += 1
+            lvl = self.levels[0]
+            handles = self._predict_defer[0](
+                lvl.params, lvl.dparams, self._put_lane(rec.xb0))
 
         # -- vectorized cascade walk: one gathered, batched predict+defer
         #    call per level over the lanes still alive there --------------
@@ -438,12 +705,13 @@ class BatchedCascadeEngine:
             sel = np.flatnonzero(alive)
             if sel.size == 0:
                 continue
-            B = self._bucket(sel.size)
-            fi = feats(i)
-            xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
-            xb[:sel.size] = fi[sel]
-            probs_d, dprob_d = self._predict_defer[i](
-                lvl.params, lvl.dparams, self._put_lane(xb))
+            if i == 0:
+                # pre-dispatched at stage A (sel == rec.sel0 by
+                # construction: the jump mask is identical)
+                probs_d, dprob_d = handles
+            else:
+                (probs_d, dprob_d), _ = self._dispatch_level(i, feats(i),
+                                                             sel)
             probs_np = np.asarray(probs_d)[:sel.size]
             dprob_np = np.asarray(dprob_d)[:sel.size]
             eval_mask[i, sel] = True
@@ -493,7 +761,7 @@ class BatchedCascadeEngine:
 
         y_full = np.zeros(S, np.int32)
         resolved = False
-        rec = None
+        prec = None
         if called.any():
             sel_c = np.flatnonzero(called)
 
@@ -522,17 +790,13 @@ class BatchedCascadeEngine:
                 missing = np.flatnonzero(called & ~eval_mask[i])
                 if missing.size == 0:
                     continue
-                fi = scatter_feats(i)
-                B = self._bucket(missing.size)
-                xb = np.zeros((B,) + fi.shape[1:], fi.dtype)
-                xb[:missing.size] = fi[missing]
-                probs_d, dprob_d = self._predict_defer[i](
-                    lvl.params, lvl.dparams, self._put_lane(xb))
+                (probs_d, dprob_d), _ = self._dispatch_level(
+                    i, scatter_feats(i), missing)
                 probs_h[i, missing] = np.asarray(probs_d)[:missing.size]
                 dprob_h[i, missing] = np.asarray(dprob_d)[:missing.size]
 
             ticket = self._expert_submit(
-                [int(indices[s]) for s in sel_c],
+                [rec.indices[s] for s in sel_c],
                 [docs[s] for s in sel_c])
             if self.max_delay == 0:
                 # synchronous path: resolve inline — with the identical
@@ -547,13 +811,13 @@ class BatchedCascadeEngine:
                 # forwards — no extra serving compute
                 predictions[sel_c] = np.argmax(
                     probs_h[nlev - 1, sel_c], axis=-1)
-            rec = _PendingTick(
+            prec = _PendingTick(
                 ticket=ticket, t=t, called=called.copy(), sel_c=sel_c,
                 feats=[scatter_feats(i) for i in range(nlev)],
                 probs=probs_h, dprob=dprob_h, cache_rngs=cache_rngs)
 
-        if rec is not None:
-            self._pending.append(rec)
+        if prec is not None:
+            self._pending.append(prec)
         # bounded annotation delay, measured in TICKS (not in
         # expert-calling ticks): a record routed at tick u commits at the
         # end of tick u + max_delay even if no intervening tick called
@@ -565,18 +829,11 @@ class BatchedCascadeEngine:
         while self._pending and t - self._pending[0].t >= self.max_delay:
             self._commit(self._pending.popleft())
 
-        # beta decays per consumed ITEM (decay^S per tick): the students
-        # are shared across lanes, so the DAgger exploration budget is
-        # measured in demonstrations seen, matching the reference's
-        # schedule in item-space (identical at S == 1).  The
-        # re-exploration floor (core.deferral) is applied once per tick
-        # at the post-tick item count — identical at S == 1, and within
-        # a tick's granularity of the reference elsewhere.
-        t_items = int(self.items_seen.sum()) + S
-        for lvl in self.levels:
-            lvl.beta = max(
-                lvl.beta * lvl.spec.beta_decay ** S,
-                reexploration_floor(lvl.spec.beta_floor, t_items))
+        # sync the observable beta to the value the dispatch-time
+        # recurrence produced for this tick (see _route_dispatch — one
+        # schedule, computed once)
+        for lvl, b in zip(self.levels, rec.beta_after):
+            lvl.beta = b
 
         # per-stream accounting
         lanes = np.arange(S)
@@ -593,6 +850,10 @@ class BatchedCascadeEngine:
             self.history["cost"].append(cost_out.copy())
             self.history["J"].append(J_t.copy())
         return {
+            # which stream items this tick served (pipelined callers map
+            # late-resolving outputs back to their submission)
+            "indices": np.asarray(rec.indices, np.int64),
+            "tick": t,
             "predictions": predictions.astype(np.int64),
             "levels": levels_out,
             "expert_called": called,
@@ -664,12 +925,25 @@ class BatchedCascadeEngine:
             lvl.apply_deferral_update(
                 self._put_lane(probs_b), self._put_lane(y_b),
                 self._put_lane(reach_b), self._put_lane(w_b), k_arr)
+        # params/dparams changed: any route forward dispatched before
+        # this commit is stale (the pipeline's resolve checks and
+        # refetches against the new state)
+        self._state_version += 1
 
     def flush(self) -> int:
         """Drain the deferred-annotation queue (blocking): apply every
-        in-flight tick's updates.  Called by ``run`` at stream end;
+        routed tick's pending updates.  Called by ``run`` at stream end;
         servers should call it before checkpointing or idling.  Returns
-        the number of ticks committed."""
+        the number of ticks committed.
+
+        The route ring must be empty first (``drain()`` — whose outputs
+        the caller needs anyway): committing annotations while ticks are
+        still in flight would land updates out of FIFO tick order and
+        break the pipelined exactness contract."""
+        if self._ring:
+            raise RuntimeError(
+                "route pipeline has in-flight ticks: drain() them "
+                "(and consume their outputs) before flush()")
         n = 0
         while self._pending:
             self._commit(self._pending.popleft())
@@ -692,20 +966,41 @@ class BatchedCascadeEngine:
     def run(self, stream, log_every: int = 0) -> dict:
         """Serve an entire stream, tick-major: tick T covers items
         [T*S, T*S + S) with lane s = offset.  Returns OnlineCascade-style
-        summary metrics plus throughput and per-stream accounting."""
+        summary metrics plus throughput and per-stream accounting.
+
+        With ``pipeline_depth >= 1`` the loop drives
+        ``submit_tick``/``drain`` — results land up to P ticks after
+        submission and are mapped back through each output's "indices";
+        with depth 0 it is the classic one-``process_tick``-per-tick
+        loop."""
         S = self.n_streams
         n = len(stream)
         preds = np.zeros(n, np.int32)
+        done = 0                      # items with results already landed
+
+        def take(out):
+            nonlocal done
+            idxs = out["indices"]
+            preds[idxs] = out["predictions"]
+            done = max(done, int(idxs.max()) + 1) if idxs.size else done
+
         t0 = time.time()
         for start in range(0, n, S):
             stop = min(start + S, n)
             idxs = list(range(start, stop))
-            out = self.process_tick(idxs, [stream.docs[i] for i in idxs])
-            preds[start:stop] = out["predictions"]
-            if log_every and (stop // log_every) > (start // log_every):
-                acc = float(np.mean(preds[:stop] == stream.labels[:stop]))
-                print(f"[{stop}/{n}] acc={acc:.4f} "
+            docs = [stream.docs[i] for i in idxs]
+            if self.pipeline_depth:
+                for out in self.submit_tick(idxs, docs):
+                    take(out)
+            else:
+                take(self.process_tick(idxs, docs))
+            if (log_every and done
+                    and (stop // log_every) > (start // log_every)):
+                acc = float(np.mean(preds[:done] == stream.labels[:done]))
+                print(f"[{done}/{n}] acc={acc:.4f} "
                       f"expert_calls={self.expert_calls_total}")
+        for out in self.drain():
+            take(out)
         self.flush()
         dt = time.time() - t0
         labels = stream.labels

@@ -43,6 +43,8 @@ from repro.optim import adam, ogd_sqrt_t
 
 @dataclass(frozen=True)
 class LevelSpec:
+    """Per-level hyperparameters (paper App. B.3 Tables 3/4 columns)."""
+
     kind: str                     # 'lr' | 'mlp' | 'tinytf' | 'tinytf_large'
     cost: float                   # c_i (model cost units, LR = 1)
     cache_size: int = 8
@@ -57,6 +59,8 @@ class LevelSpec:
 
 @dataclass(frozen=True)
 class CascadeConfig:
+    """Whole-cascade configuration: levels, cost model, and RNG seed."""
+
     levels: Tuple[LevelSpec, ...]
     n_classes: int
     expert_cost: float            # c_N in model cost units
@@ -248,6 +252,22 @@ class _Level:
         else:
             self._predict_batch = lambda p, xb: tinytf_predict(p, xb, sspec)
 
+        # Route pass, split for pipelining (core/batched.py): the body is
+        # exposed unjitted so the batched engines can jit it with their
+        # own placement/donation annotations (sharding.jit_route_pass),
+        # DISPATCH it asynchronously against a tick's gathered lane
+        # subset, and only later block on the handles — ``np.asarray`` on
+        # the returned pair is the sole device->host sync point of a
+        # route pass.  At a (1, ...) batch this is the reference's
+        # ``predict_and_defer`` computation exactly.
+        predict_batch = self._predict_batch
+
+        def route_pass(params, dparams, xb):
+            probs = predict_batch(params, xb)
+            return probs, deferral_prob(dparams, probs)
+
+        self.route_pass = route_pass
+
         def predict_and_defer(params, dparams, x):
             probs = predict(params, x)
             return probs, deferral_prob(dparams, probs[None])[0]
@@ -263,12 +283,14 @@ class _Level:
 
     # -- cache ---------------------------------------------------------
     def cache_add(self, x: np.ndarray, y: int):
+        """FIFO-insert one expert demonstration into the level's cache."""
         self.cache_x[self.cache_ptr] = x
         self.cache_y[self.cache_ptr] = y
         self.cache_ptr = (self.cache_ptr + 1) % self.spec.cache_size
         self.cache_n = min(self.cache_n + 1, self.spec.cache_size)
 
     def student_update(self, rng: np.random.Generator):
+        """One imitation step on a cache mini-batch drawn from ``rng``."""
         if self.cache_n == 0:
             return
         bs = min(self.spec.batch_size, self.spec.cache_size)
@@ -301,6 +323,7 @@ class _Level:
                 self.dparams, self.dopt_state, probs, y, reach, w, k)
 
     def featurize(self, doc: np.ndarray) -> np.ndarray:
+        """Map a raw doc to this level's input (hashed BoW or token ids)."""
         if self.spec.kind in ("lr", "mlp"):
             return hash_bow(doc, self.cfg.n_features)
         return hash_ids(doc, self.sspec.vocab, self.sspec.max_len)

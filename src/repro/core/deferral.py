@@ -50,6 +50,8 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class DeferralSpec:
+    """Deferral-MLP shape: input class count, hidden width, init."""
+
     n_classes: int
     hidden: int = 32
     init_open: float = 2.0       # initial logit -> sigmoid(2.0) ~ 0.88
@@ -79,6 +81,7 @@ def _features(probs: jax.Array) -> jax.Array:
 
 
 def deferral_init(key, spec: DeferralSpec):
+    """Initialize f_i's MLP params (final bias starts the gate open)."""
     d_in = spec.n_classes + 2
     k1, k2 = jax.random.split(key)
     return {
@@ -90,11 +93,13 @@ def deferral_init(key, spec: DeferralSpec):
 
 
 def deferral_logit(params, probs):
+    """Pre-sigmoid deferral score for a (..., C) batch of probs."""
     h = jnp.tanh(_features(probs) @ params["w1"] + params["b1"])
     return (h @ params["w2"] + params["b2"])[..., 0]
 
 
 def deferral_prob(params, probs):
+    """Deferral probability f_i(probs) in (0, 1), batched."""
     return jax.nn.sigmoid(deferral_logit(params, probs))
 
 

@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.data.features import hash_bow, hash_ids
 from repro.models.students import (
-    LRSpec, TinyTFSpec, lr_init, lr_predict, tinytf_init, tinytf_predict,
-    tinytf_logits)
+    LRSpec, TinyTFSpec, lr_init, lr_predict, tinytf_init, tinytf_logits,
+    tinytf_predict)
 from repro.optim import adam
 
 

@@ -18,6 +18,8 @@ from repro.core.cascade import CascadeConfig, _Level
 
 
 class OnlineEnsemble:
+    """Paper §4 baseline: weighted-majority ensemble, no cascade."""
+
     def __init__(self, config: CascadeConfig, expert,
                  expert_prob_decay: float = 0.9995,
                  min_expert_prob: float = 0.0):
@@ -48,6 +50,7 @@ class OnlineEnsemble:
 
     def process(self, idx: int, doc: np.ndarray,
                 hard_budget: Optional[int] = None) -> dict:
+        """Serve one item: expert w.p. p_t, else weighted majority."""
         self.t += 1
         feats = [lvl.featurize(doc) for lvl in self.levels]
         probs = np.stack([
@@ -79,6 +82,7 @@ class OnlineEnsemble:
         return {"prediction": prediction, "expert_called": expert_called}
 
     def run(self, stream, hard_budget: Optional[int] = None) -> dict:
+        """Serve a whole stream; returns accuracy + expert-call count."""
         preds = np.zeros(len(stream), np.int32)
         for i, doc in enumerate(stream.docs):
             preds[i] = self.process(i, doc, hard_budget)["prediction"]

@@ -60,9 +60,11 @@ class ExpertTicket:
         self._future = future
 
     def done(self) -> bool:
+        """True once the labels are available without blocking."""
         return self._future is None or self._future.done()
 
     def result(self) -> np.ndarray:
+        """Block until the labels are available and return them."""
         if self._future is not None:
             self._labels = np.asarray(self._future.result(), np.int32)
             self._future = None
@@ -78,6 +80,8 @@ def poll_ticket(ticket: ExpertTicket,
 
 
 class SimulatedExpert:
+    """Zero-compute expert replaying precomputed noisy-LLM labels."""
+
     def __init__(self, stream: Stream, name: str = "gpt-3.5-turbo",
                  cost: float = 1.0e6):
         self.name = name
@@ -85,6 +89,7 @@ class SimulatedExpert:
         self._labels = stream.expert_labels(name)
 
     def label(self, idx: int, doc: np.ndarray) -> int:
+        """Annotate one stream item (table lookup)."""
         return int(self._labels[idx])
 
     def label_batch(self, idxs, docs) -> np.ndarray:
@@ -95,10 +100,12 @@ class SimulatedExpert:
     # -- async interface (resolved inline: a table lookup has no latency
     #    to overlap, but the engine drives one code path for all experts)
     def submit(self, idxs, docs) -> ExpertTicket:
+        """Enqueue a batch annotation (resolved inline — no latency)."""
         return ExpertTicket(labels=self.label_batch(idxs, docs))
 
     def poll(self, ticket: ExpertTicket,
              block: bool = True) -> Optional[np.ndarray]:
+        """Labels when ready, else None (non-blocking poll)."""
         return poll_ticket(ticket, block)
 
 
@@ -118,6 +125,7 @@ class ModelExpert:
             lambda p, ids: tinytf_predict(p, ids, spec))
 
     def label(self, idx: int, doc: np.ndarray) -> int:
+        """Annotate one stream item with a single model forward."""
         ids = hash_ids(doc, self.spec.vocab, self.spec.max_len)[None]
         probs = self._predict(self.params, jnp.asarray(ids))
         return int(jnp.argmax(probs[0]))
@@ -136,6 +144,7 @@ class ModelExpert:
     #    student compute (one worker keeps submission order = completion
     #    order, which the engine's FIFO queue relies on)
     def submit(self, idxs, docs) -> ExpertTicket:
+        """Enqueue a batch annotation on the worker thread."""
         if self._executor is None:
             self._executor = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix=self.name)
@@ -145,6 +154,7 @@ class ModelExpert:
 
     def poll(self, ticket: ExpertTicket,
              block: bool = True) -> Optional[np.ndarray]:
+        """Labels when ready, else None (non-blocking poll)."""
         return poll_ticket(ticket, block)
 
     def close(self) -> None:

@@ -54,8 +54,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        l_fin = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l_fin).astype(o_ref.dtype)
 
 
 def decode_attention_grouped(q, k, v, pos, *, block_kv: int = 512,

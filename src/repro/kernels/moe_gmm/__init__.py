@@ -1,3 +1,3 @@
-from repro.kernels.moe_gmm.ops import moe_gmm, moe_expert_ffn
+from repro.kernels.moe_gmm.ops import moe_expert_ffn, moe_gmm
 
 __all__ = ["moe_gmm", "moe_expert_ffn"]

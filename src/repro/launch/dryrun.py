@@ -1,3 +1,6 @@
+"""Multi-pod dry-run driver: AOT lower + compile every arch x shape x
+mesh combination without hardware (see ``DOC`` below for the full
+story); must set XLA_FLAGS before any jax import."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
@@ -62,6 +65,7 @@ def _div(n, mesh, axes) -> bool:
 
 
 def batch_pspecs(batch_struct, mesh):
+    """PartitionSpecs sharding every batch leaf's dim 0 over lanes."""
     baxes = shd.batch_axes(mesh)
 
     def one(leaf):
@@ -137,6 +141,7 @@ def zero_shard_specs(specs, struct, mesh):
 # ---------------------------------------------------------------------------
 def make_train_step(cfg, opt, remat: bool = True, unroll: bool = False,
                     loss_chunk: int = 0):
+    """Build the (params, opt_state, batch) -> loss train step."""
     def train_step(params, opt_state, batch):
         def loss_fn(p):
             loss, metrics = tf_model.train_loss(p, batch, cfg, remat=remat,
@@ -152,6 +157,7 @@ def make_train_step(cfg, opt, remat: bool = True, unroll: bool = False,
 
 def make_prefill_step(cfg, cache_len: Optional[int] = None,
                       unroll: bool = False):
+    """Build the (params, batch) -> (logits, cache) prefill step."""
     def prefill_step(params, batch):
         return tf_model.prefill(params, batch, cfg, cache_len=cache_len,
                                 unroll=unroll)
@@ -159,6 +165,7 @@ def make_prefill_step(cfg, cache_len: Optional[int] = None,
 
 
 def make_decode_step(cfg, unroll: bool = False):
+    """Build the single-token (params, cache, tokens, pos) step."""
     def decode_step(params, cache, tokens, pos):
         return tf_model.decode_step(params, cache, tokens, pos, cfg,
                                     unroll=unroll)
@@ -263,6 +270,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                shard_params_data: bool = False,
                extrapolate: bool = True, hw=V5E,
                verbose: bool = True) -> dict:
+    """Lower+compile one combination; returns the roofline record."""
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
     if moe_mode and cfg.moe is not None:
@@ -415,6 +423,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def main():
+    """CLI driver: dry-run the requested (arch, shape) grid."""
     ap = argparse.ArgumentParser(description=DOC)
     ap.add_argument("--arch", type=str, default=None)
     ap.add_argument("--shape", type=str, default=None,

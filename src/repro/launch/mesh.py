@@ -16,6 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_mesh(shape, axes):
+    """A Mesh with the given axis sizes/names (thin jax wrapper)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 

@@ -41,6 +41,7 @@ class _BatchProxy:
         self.fallback_calls = 0
 
     def label(self, idx: int, doc) -> int:
+        """Serve item ``idx``'s precomputed label (or fall back live)."""
         if idx in self.table:
             return int(self.table[idx])
         self.fallback_calls += 1
@@ -91,7 +92,7 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                          batch: int = 64, expert_kind: str = "model",
                          seed: int = 0, log_every: int = 500,
                          mesh=None, updates_per_tick: str = "single",
-                         async_delay: int = 0):
+                         async_delay: int = 0, pipeline_depth: int = 0):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -101,7 +102,11 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     the item-space adaptation gap of one-update-per-tick batching.
     ``async_delay >= 1`` overlaps the expert forward with the next ticks'
     student compute (deferred lanes answer provisionally; annotations
-    land within that many ticks — core/batched.py ``max_delay``)."""
+    land within that many ticks — core/batched.py ``max_delay``).
+    ``pipeline_depth >= 1`` additionally overlaps the route passes
+    themselves: up to that many ticks' level-0 forwards stay in flight
+    while older ticks' host routing resolves, with results unchanged
+    (core/batched.py pipelined route mode).  All three compose."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
@@ -112,7 +117,9 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     # per-item history would grow without bound on long streams
     engine = BatchedCascadeEngine(cfg, expert, n_streams=batch, mesh=mesh,
                                   updates_per_tick=updates_per_tick,
-                                  max_delay=async_delay, history_limit=0)
+                                  max_delay=async_delay,
+                                  pipeline_depth=pipeline_depth,
+                                  history_limit=0)
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
     dt = time.time() - t0
@@ -121,6 +128,11 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
              f"batch={batch} mesh={dict(mesh.shape)}")
     if async_delay:
         lanes += f" async_delay={async_delay}"
+    if pipeline_depth:
+        st = engine.pipeline_stats
+        lanes += (f" pipeline_depth={pipeline_depth} "
+                  f"(refetches={st['refetches']} "
+                  f"fences={st['update_fences'] + st['budget_fences']})")
     print(f"\nserved {len(stream)} queries in {dt:.1f}s "
           f"({metrics['items_per_sec']:.0f} items/s, {lanes})")
     print(f"accuracy={metrics['accuracy']:.4f}  "
@@ -200,35 +212,80 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    """CLI entry point: parse serving flags and run the chosen engine.
+
+    Engine-composition cheat sheet (all batched-engine knobs compose):
+    ``--batch`` sets the lane count, ``--mesh`` shards those lanes over
+    devices, ``--async-delay`` takes the expert off the critical path,
+    ``--pipeline-depth`` takes the per-tick route sync off it, and
+    ``--updates scaled`` keeps item-space adaptation at large batch.
+    docs/ARCHITECTURE.md walks the whole tick lifecycle."""
+    ap = argparse.ArgumentParser(
+        description="Streaming cascade server (online cascade learning)")
     ap.add_argument("--dataset", default="hatespeech",
-                    choices=["imdb", "hatespeech", "isear", "fever"])
-    ap.add_argument("--samples", type=int, default=2000)
-    ap.add_argument("--mu", type=float, default=3e-7)
+                    choices=["imdb", "hatespeech", "isear", "fever"],
+                    help="which simulated stream corpus to serve "
+                         "(data/streams.py; paper's four benchmarks)")
+    ap.add_argument("--samples", type=int, default=2000,
+                    help="stream length in items (queries served)")
+    ap.add_argument("--mu", type=float, default=3e-7,
+                    help="cost weighting factor mu (Eq. 1): the user's "
+                         "accuracy-vs-LLM-cost budget knob; larger mu "
+                         "closes the deferral gates sooner")
     ap.add_argument("--engine", default="batched",
-                    choices=["batched", "sequential"])
+                    choices=["batched", "sequential"],
+                    help="'batched' = BatchedCascadeEngine (S lanes in "
+                         "lockstep, the serving default); 'sequential' = "
+                         "per-item Algorithm-1 reference loop with "
+                         "probe/replay expert micro-batching (semantics "
+                         "oracle)")
     ap.add_argument("--batch", type=int, default=64,
-                    help="concurrent stream lanes (batched engine)")
+                    help="concurrent stream lanes S (batched engine): "
+                         "each tick serves one item per lane; S=1 is "
+                         "bit-identical to the sequential reference")
     ap.add_argument("--mesh", default="",
                     help="lane-shard the batched engine over a device "
                          "mesh, e.g. 'data=8' or 'pod=2,data=4' (set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
-                         "count=N for virtual CPU devices)")
+                         "count=N for virtual CPU devices); cascade "
+                         "state stays replicated, --batch must divide "
+                         "by the lane-device count")
     ap.add_argument("--updates", default="single",
                     choices=["single", "scaled"],
                     help="per-tick update scheduling (batched engine): "
                          "'scaled' lr-scales the one weighted step by "
-                         "the tick's expert-demo count")
+                         "the tick's expert-demo count (Optimizer."
+                         "step_k), pinning expert-call counts near the "
+                         "sequential reference at large --batch")
     ap.add_argument("--async-delay", type=int, default=0,
                     help="bounded annotation delay in ticks (batched "
                          "engine): >=1 overlaps the expert forward with "
-                         "student compute; 0 = synchronous (bit-exact "
-                         "reference semantics)")
+                         "student compute — deferred lanes answer "
+                         "provisionally and annotations commit exactly "
+                         "that many ticks later; 0 = synchronous "
+                         "(bit-exact reference semantics)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="route-pipeline depth P (batched engine): >=1 "
+                         "keeps up to P ticks' level-0 forwards in "
+                         "flight while older ticks' host routing "
+                         "resolves, hiding featurization and transfer "
+                         "latency behind device compute; predictions, "
+                         "levels and expert calls are identical for any "
+                         "P (update ticks fence the pipeline); 0 = "
+                         "unpipelined")
     ap.add_argument("--microbatch", type=int, default=16,
-                    help="expert micro-batch (sequential engine)")
+                    help="expert micro-batch size (sequential engine): "
+                         "the probe/replay pass batches this many "
+                         "items' deferred expert calls into one forward")
     ap.add_argument("--expert", default="model",
-                    choices=["model", "simulated"])
-    ap.add_argument("--seed", type=int, default=0)
+                    choices=["model", "simulated"],
+                    help="'model' trains an in-repo transformer as the "
+                         "LLM stand-in (real expert compute); "
+                         "'simulated' replays the stream's precomputed "
+                         "noisy-teacher annotations (zero compute)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="stream/cascade RNG seed (core/rng.py per-tick "
+                         "key discipline)")
     args = ap.parse_args()
     if args.engine == "batched":
         from repro.launch.mesh import parse_mesh_spec
@@ -237,7 +294,8 @@ def main():
                              seed=args.seed,
                              mesh=parse_mesh_spec(args.mesh),
                              updates_per_tick=args.updates,
-                             async_delay=args.async_delay)
+                             async_delay=args.async_delay,
+                             pipeline_depth=args.pipeline_depth)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed)

@@ -30,6 +30,8 @@ from repro.models import transformer as tf_model
 
 @dataclass(frozen=True)
 class InputShape:
+    """One dry-run workload: step kind + (batch, seq) dims."""
+
     name: str
     kind: str          # train | prefill | decode
     seq: int
@@ -51,6 +53,7 @@ def needs_long_context_override(cfg: ModelConfig, shape: InputShape) -> bool:
 
 
 def resolve_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply shape-dependent config overrides (long-context window)."""
     if needs_long_context_override(cfg, shape):
         return cfg.with_window(cfg.long_context_window)
     return cfg

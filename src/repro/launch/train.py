@@ -31,6 +31,7 @@ from repro.sharding import param_pspecs
 def train(arch: str, smoke: bool = True, steps: int = 50, batch: int = 8,
           seq: int = 256, lr: float = 1e-3, seed: int = 0,
           ckpt: str = None, log_every: int = 10, remat: bool = False):
+    """Train a zoo model on synthetic LM batches (pjit on host mesh)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     mesh = make_host_mesh()
     shd.set_mesh(mesh)
@@ -80,6 +81,7 @@ def train(arch: str, smoke: bool = True, steps: int = 50, batch: int = 8,
 
 
 def main():
+    """CLI wrapper around ``train``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")

@@ -93,7 +93,48 @@ def put_lanes(x, mesh: Mesh) -> jax.Array:
 
 
 def put_replicated(x, mesh: Mesh) -> jax.Array:
+    """Place ``x`` replicated over every device of ``mesh``."""
     return jax.device_put(x, replicated_sharding(mesh))
+
+
+# ---------------------------------------------------------------------------
+# In-flight route buffers (pipelined batched engine)
+# ---------------------------------------------------------------------------
+# The pipelined route mode (core/batched.py ``pipeline_depth``) keeps a
+# P-deep ring of dispatched-but-unresolved ticks.  Each in-flight tick
+# pins one padded lane feature buffer (the route pass input) and one
+# (probs, dprob) output pair on the device until host routing resolves
+# it.  Two annotations keep that ring cheap:
+
+def jit_route_pass(fn, mesh: Optional[Mesh] = None):
+    """Jit a per-level route pass ``fn(params, dparams, xb)``.
+
+    ``xb`` is the padded lane-major feature buffer built fresh for each
+    dispatch and never read again by the host.  With a mesh (where
+    ``put_lanes`` has committed it to devices) it is donated, so a
+    pipeline holding P ticks in flight pins only the route *outputs*
+    instead of also keeping P dead input buffers alive.  Without a mesh
+    the inputs may be uncommitted host-local arrays — donation would be
+    ignored with a warning — so the plain jit is returned.
+    """
+    if mesh is None:
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(2,))
+
+
+def host_prefetch(arrays) -> None:
+    """Start async device->host copies for ``arrays`` (non-blocking).
+
+    The pipelined route ring calls this right after dispatching a tick's
+    forwards: the D2H transfer of the in-flight ``(probs, dprob)`` pair
+    is enqueued behind their producing computation, so it overlaps the
+    next ticks' device compute and the eventual ``np.asarray`` at host
+    resolution is a wait on a transfer already done, not a round trip.
+    """
+    for a in arrays:
+        copy = getattr(a, "copy_to_host_async", None)
+        if copy is not None:
+            copy()
 
 
 def _axis_size(mesh: Mesh, axes) -> int:

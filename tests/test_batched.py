@@ -90,8 +90,8 @@ def test_multi_stream_per_lane_accounting():
     # per-lane level counts reconcile with the aggregate history
     lv = np.stack(bat.history["level"])          # (ticks, S)
     for s in range(n_streams):
-        for l in range(len(bat.levels) + 1):
-            assert bat.level_counts[s, l] == int(np.sum(lv[:, s] == l))
+        for lev in range(len(bat.levels) + 1):
+            assert bat.level_counts[s, lev] == int(np.sum(lv[:, s] == lev))
 
 
 def test_multi_stream_hard_budget_respected():

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -128,7 +127,7 @@ def test_mu_controls_budget_monotonically():
 
 
 def test_cache_fifo():
-    from repro.core.cascade import _Level, LevelSpec, CascadeConfig
+    from repro.core.cascade import _Level
     cfg = default_cascade_config(n_classes=2)
     lvl = _Level(cfg.levels[0], cfg, jax.random.PRNGKey(0))
     for i in range(20):

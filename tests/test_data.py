@@ -1,6 +1,5 @@
 """Data pipeline tests: determinism, benchmark statistics, shifts."""
 import numpy as np
-import pytest
 
 from repro.data import BENCHMARKS, hash_bow, hash_ids, make_stream
 

@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -15,8 +14,7 @@ from repro.configs import get_smoke_config
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.models import transformer as tf
 from repro.models.attention import (
-    causal_prefill_blocked, chunked_attention, prefill_attention,
-    swa_prefill_attention)
+    causal_prefill_blocked, chunked_attention, swa_prefill_attention)
 from repro.models.moe import capacity_for, moe_ffn_local, route
 
 
