@@ -1,0 +1,214 @@
+"""Expert pool + per-lane commit granularity: does the pool actually
+scale annotation throughput, and does per-lane commit actually cut
+annotation-commit latency?
+
+Two measurements, reported honestly on this host:
+
+1. **Commit latency** (SimulatedExpert behind a per-ANNOTATION wall
+   clock pad — a rate-limited remote LLM endpoint stand-in — learning
+   regime, D=2).  Three rows isolate the two tentpole axes:
+
+   * ``tick W=1`` — the PR-3 drain: one worker, whole-tick commits at
+     age exactly D; when per-tick annotation demand exceeds one
+     worker's rate the queue backlog shows up directly as commit wall
+     latency;
+   * ``tick W=4`` — pool only: sharded ``submit_many`` capacity clears
+     the backlog, commits still land at age D;
+   * ``lane W=4`` — pool + the per-lane spread schedule
+     (core/batched.py ``lanes_due``): mean commit age drops toward
+     (D+1)/2.  (Per-lane is a different — documented — update
+     trajectory with per-item update dispatch, so expert-call counts
+     and engine throughput differ; both are reported.)
+
+2. **Pool throughput scaling** (``submit_many`` microbench): time k
+   annotations submit->resolve at workers W in {1, 2, 4}, in two expert
+   regimes:
+
+   * ``padded`` — each annotation pays the per-item latency pad, so a
+     shard of m items costs m*pad at its worker (the rate-limited
+     endpoint): shards wait concurrently and throughput should scale
+     ~linearly in W;
+   * ``model`` — the in-repo transformer ``ModelExpert``: shard
+     forwards share this host's CPU, so scaling is bounded by how much
+     the jitted forwards actually interleave (GIL released during
+     device execution); reported honestly, expect well under linear on
+     a small box.
+
+CSV convention: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+
+class _PaddedSimulatedExpert:
+    """SimulatedExpert plus a wall-clock pad per ANNOTATION (so a shard
+    of m items costs m*pad at its worker — a rate-limited remote
+    endpoint stand-in), with the full pooled async interface."""
+
+    def __init__(self, base, pad_s: float, workers: int = 1):
+        from concurrent.futures import ThreadPoolExecutor
+        self.base = base
+        self.pad_s = pad_s
+        self.workers = max(int(workers), 1)
+        self.cost = base.cost
+        self.name = f"{base.name}+{pad_s * 1e3:.0f}ms/ann"
+        self._pool = ThreadPoolExecutor(max_workers=self.workers)
+
+    def _annotate(self, idxs, docs):
+        time.sleep(self.pad_s * max(len(idxs), 1))
+        return self.base.label_batch(idxs, docs)
+
+    def label(self, idx, doc):
+        time.sleep(self.pad_s)
+        return self.base.label(idx, doc)
+
+    def label_batch(self, idxs, docs):
+        return self._annotate(idxs, docs)
+
+    def submit(self, idxs, docs):
+        from repro.core.experts import ExpertTicket
+        return ExpertTicket(
+            future=self._pool.submit(self._annotate, list(idxs),
+                                     list(docs)))
+
+    def submit_many(self, idxs, docs):
+        from repro.core.experts import ExpertTicket, shard_bounds
+        idxs, docs = list(idxs), list(docs)
+        shards = [(lo, hi, self._pool.submit(self._annotate, idxs[lo:hi],
+                                             docs[lo:hi]))
+                  for lo, hi in shard_bounds(len(idxs), self.workers)]
+        return ExpertTicket(shards=shards)
+
+    def poll(self, ticket, block=True):
+        from repro.core.experts import poll_ticket
+        return poll_ticket(ticket, block)
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+
+def _commit_latency(cfg, stream, batch, pad_ms, per_lane, workers):
+    from repro.core import BatchedCascadeEngine, SimulatedExpert
+    expert = _PaddedSimulatedExpert(
+        SimulatedExpert(stream, "gpt-3.5-turbo"), pad_ms / 1e3,
+        workers=workers)
+    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch,
+                                  max_delay=2, per_lane=per_lane,
+                                  history_limit=0)
+    engine.run(stream)              # compile + warm
+    engine.reset()
+    t0 = time.time()
+    m = engine.run(stream)
+    dt = time.time() - t0
+    cs = engine.commit_stats
+    expert.close()
+    lanes = max(cs["lanes"], 1)
+    return {
+        "mode": "lane" if per_lane else "tick",
+        "workers": workers,
+        "items_per_sec": len(stream) / dt,
+        "mean_commit_age_ticks": cs["age_sum"] / lanes,
+        "mean_commit_latency_ms": cs["wall_sum"] / lanes * 1e3,
+        "expert_calls": m["expert_calls"],
+        "accuracy": m["accuracy"],
+    }
+
+
+def _pool_scaling(stream, k, workers_list, pad_ms, repeats=5):
+    """submit_many -> result wall time per W, padded + model regimes."""
+    from repro.core import ModelExpert, SimulatedExpert
+    from repro.core.experts import train_model_expert
+
+    model = train_model_expert(stream, stream.spec.n_classes,
+                               d_model=128, n_layers=2, epochs=1,
+                               max_samples=min(512, len(stream)), seed=0)
+    idxs = list(range(k))
+    docs = stream.docs[:k]
+    out = {"padded": [], "model": []}
+    for regime in ("padded", "model"):
+        for w in workers_list:
+            if regime == "padded":
+                exp = _PaddedSimulatedExpert(
+                    SimulatedExpert(stream, "gpt-3.5-turbo"),
+                    pad_ms / 1e3, workers=w)
+            else:
+                exp = ModelExpert(params=model.params, spec=model.spec,
+                                  cost=model.cost, workers=w)
+            exp.poll(exp.submit_many(idxs, docs))      # warm the pool
+            t0 = time.time()
+            for _ in range(repeats):
+                exp.poll(exp.submit_many(idxs, docs))
+            dt = (time.time() - t0) / repeats
+            exp.close()
+            out[regime].append({"workers": w, "dt": dt,
+                                "anns_per_sec": k / dt})
+        base = out[regime][0]["dt"]
+        for r in out[regime]:
+            r["speedup_vs_w1"] = base / r["dt"]
+    model.close()
+    return out
+
+
+def run(samples: int = 384, seed: int = 0, batch: int = 16,
+        dataset: str = "hatespeech", mu: float = 3e-7,
+        pad_ms: float = 25.0, quick: bool = False) -> dict:
+    from dataclasses import replace
+
+    from repro.core import default_cascade_config
+    from repro.data import make_stream
+
+    if quick:
+        samples = min(samples, 256)
+    stream = make_stream(dataset, seed=seed, n_samples=samples)
+    base = default_cascade_config(n_classes=stream.spec.n_classes,
+                                  mu=mu, seed=seed)
+    # learning regime: slow DAgger decay keeps annotations flowing, so
+    # the commit drain (not an empty queue) is what gets measured
+    cfg = replace(base, levels=tuple(
+        replace(lvl, beta_decay=0.995) for lvl in base.levels))
+
+    rows = [
+        _commit_latency(cfg, stream, batch, pad_ms, per_lane=False,
+                        workers=1),
+        _commit_latency(cfg, stream, batch, pad_ms, per_lane=False,
+                        workers=4),
+        _commit_latency(cfg, stream, batch, pad_ms, per_lane=True,
+                        workers=4),
+    ]
+    for r in rows:
+        print(f"[pool_throughput] commit={r['mode']:>4} W={r['workers']} "
+              f"mean_age={r['mean_commit_age_ticks']:.2f} ticks  "
+              f"mean_latency={r['mean_commit_latency_ms']:7.1f} ms  "
+              f"{r['items_per_sec']:7.1f} it/s  "
+              f"acc={r['accuracy']:.4f} calls={r['expert_calls']}")
+
+    scaling = _pool_scaling(stream, k=64 if quick else 96,
+                            workers_list=(1, 2, 4), pad_ms=4.0,
+                            repeats=3 if quick else 5)
+    for regime, rws in scaling.items():
+        for r in rws:
+            print(f"[pool_throughput] {regime:>6} W={r['workers']} "
+                  f"{r['anns_per_sec']:8.1f} ann/s  "
+                  f"speedup={r['speedup_vs_w1']:.2f}x")
+
+    out = {
+        "commit_latency": rows,
+        "pool_scaling": scaling,
+        "samples": samples,
+        # per-lane spread vs the per-tick drain, same W=4 pool
+        "headline_age_ratio": (rows[1]["mean_commit_age_ticks"]
+                               / max(rows[2]["mean_commit_age_ticks"],
+                                     1e-9)),
+        # pool capacity vs the single PR-3 worker, same per-tick drain
+        "headline_pool_latency_ratio": (
+            rows[0]["mean_commit_latency_ms"]
+            / max(rows[1]["mean_commit_latency_ms"], 1e-9)),
+        "headline_padded_w4": scaling["padded"][-1]["speedup_vs_w1"],
+        "headline_model_w4": scaling["model"][-1]["speedup_vs_w1"],
+    }
+    return out
+
+
+if __name__ == "__main__":
+    run()

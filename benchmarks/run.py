@@ -27,8 +27,9 @@ def main() -> None:
     from benchmarks import (async_throughput, batched_throughput,
                             case_analysis, cost_equilibrium,
                             distribution_shift, pipelined_throughput,
-                            prefill_cost, regret, roofline_report,
-                            sharded_throughput, table1, tradeoff_curves)
+                            pool_throughput, prefill_cost, regret,
+                            roofline_report, sharded_throughput, table1,
+                            tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -60,6 +61,15 @@ def main() -> None:
         record("pipelined_throughput", t0,
                f"converged_wall={pt['headline_wall_speedup']:.2f}x_"
                f"projected={pt['headline_projected_speedup']:.2f}x")
+
+    if "pool" not in args.skip:
+        t0 = time.time()
+        pl = pool_throughput.run(samples=min(n, 384), seed=args.seed,
+                                 quick=quick)
+        record("pool_throughput", t0,
+               f"commit_age_ratio={pl['headline_age_ratio']:.2f}x_"
+               f"pool_latency={pl['headline_pool_latency_ratio']:.1f}x_"
+               f"padded_w4={pl['headline_padded_w4']:.2f}x")
 
     if "sharded" not in args.skip:
         t0 = time.time()

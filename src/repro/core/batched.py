@@ -127,6 +127,46 @@ emitted stay provisional — the accuracy cost of the delay is measured,
 not hidden (tests/test_async.py pins the bounded-delay regression;
 benchmarks/async_throughput.py measures the expert/student overlap win).
 
+Per-lane commit granularity + expert pool (``per_lane=``)
+---------------------------------------------------------
+The per-tick drain above commits a routed tick's annotations as ONE
+block at age exactly D: every deferred lane waits for the whole tick's
+ticket, one update aggregates the tick's k demonstrations, and a single
+slow annotation batch delays every lane behind it.  ``per_lane=True``
+upgrades the queue to per-lane granularity:
+
+  * the deferred subset is submitted through ``expert.submit_many``
+    (core/experts.py): the batch is split into ``min(workers, k)``
+    contiguous shards annotated by W concurrent workers, and the ticket
+    completes *per item* — ``result_slice`` blocks on exactly the
+    shards a commit needs, so expert throughput scales with the pool
+    instead of serializing behind one worker;
+  * each lane commits individually — ring-buffer scatter of its one
+    demonstration, a per-item student step sampled with the LANE'S OWN
+    tick cache RNG, and a single-item deferral/gate update — i.e. the
+    sequential reference's per-item update schedule, recovered inside
+    the batched engine (at S == 1 this is bitwise the reference, and
+    ``updates_per_tick="scaled"`` becomes a no-op: the per-item steps
+    ARE the schedule it approximates);
+  * lanes drain on a deterministic sub-deadline schedule (``lanes_due``)
+    that spreads a tick's k lanes over the D tick boundaries inside the
+    delay window (cumulative ``floor(age * k / D)``, everything due at
+    age D) — mean annotation-commit age drops from D to ~(D+1)/2 at
+    D >= 2 while the <= D bound is untouched;
+  * updates stay in strict (submit-tick, lane) order: the drain only
+    advances past a tick's queue head once it is fully committed, and
+    blocking on a not-yet-ready shard (never skipping it) is what keeps
+    the schedule — and therefore predictions, params, and optimizer
+    state — BITWISE IDENTICAL for any worker count and any worker
+    latency interleaving.  Worker timing moves wall-clock blocking,
+    never semantics (tests/test_pool.py pins W in {1,2,4} and
+    adversarial latency schedules).
+
+``per_lane=False`` (default) with ``workers=1`` executes the exact
+PR-3 per-tick path.  ``commit_stats`` aggregates per-lane commit age
+(ticks) and wall latency (seconds) for both modes;
+benchmarks/pool_throughput.py measures the latency and W-scaling wins.
+
 Lane sharding (``mesh=``)
 -------------------------
 Passing a ``jax.sharding.Mesh`` shards the engine's lane-major arrays —
@@ -226,7 +266,27 @@ from repro.core.cascade import CascadeConfig, _Level, make_history
 from repro.core.deferral import reexploration_floor
 from repro.core.experts import ExpertTicket
 from repro.core.rng import sample_cache_indices, tick_rngs
-from repro.sharding import host_prefetch, jit_route_pass
+from repro.sharding import host_prefetch, jit_cache_scatter, jit_route_pass
+
+
+def lanes_due(k: int, age: int, max_delay: int, per_lane: bool) -> int:
+    """Cumulative count of a routed tick's k annotated lanes whose
+    commit deadline has passed ``age`` ticks after routing.
+
+    Per-tick mode: all k at age ``max_delay``, none before.  Per-lane
+    mode: the k lanes spread over the D tick boundaries inside the delay
+    window — ``floor(age * k / max_delay)`` due by age, everything due
+    at ``age >= max_delay`` (the <= D bound).  A pure function of
+    (k, age, max_delay, per_lane): the commit schedule never depends on
+    worker timing, which is what makes engine results bitwise invariant
+    to pool size and annotation latency (tests/test_properties.py pins
+    the monotonicity/bound/exactly-once invariants).
+    """
+    if age >= max_delay:
+        return k
+    if not per_lane or age <= 0:
+        return 0
+    return (age * k) // max_delay
 
 
 @dataclass
@@ -237,7 +297,9 @@ class _PendingTick:
     engine's update block once the labels land: the called-lane feature
     rows per level, the route-time probs/dprob of every level at the
     called lanes (gate calibration inputs), and the tick's own
-    cache-sampling generators."""
+    cache-sampling generators.  ``committed`` is the per-lane drain
+    cursor: lanes ``sel_c[:committed]`` have already committed (always 0
+    or k in per-tick mode)."""
     ticket: ExpertTicket
     t: int                        # tick this record was routed at
     called: np.ndarray            # (S,) bool — lanes annotated this tick
@@ -246,6 +308,12 @@ class _PendingTick:
     probs: np.ndarray             # (nlev, S, C) route-time student probs
     dprob: np.ndarray             # (nlev, S) route-time deferral probs
     cache_rngs: list              # per-level np generators (lane-0 tick)
+    committed: int = 0            # lanes already committed (prefix)
+    lane_cache_rngs: Optional[list] = None   # per called lane, per level
+    wall: float = 0.0             # wall-clock at submit (latency stats)
+    feats_dev: Optional[list] = None   # device copies of feats, uploaded
+                                       # once and shared by the record's
+                                       # per-lane scatters
 
 
 @dataclass
@@ -273,6 +341,7 @@ class _InFlightTick:
     handles: Optional[tuple]      # in-flight (probs, dprob) device pair
     version: int                  # engine commit counter at dispatch
     beta_after: List[float]       # per-level beta after this tick's decay
+    lane_cache: Optional[list] = None   # per-lane cache rngs (per_lane)
 
 
 class BatchedCascadeEngine:
@@ -286,6 +355,7 @@ class BatchedCascadeEngine:
     def __init__(self, config: CascadeConfig, expert, n_streams: int = 64,
                  *, updates_per_tick: str = "single", mesh=None,
                  max_delay: int = 0, pipeline_depth: int = 0,
+                 per_lane: bool = False,
                  history_limit: Optional[int] = None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
@@ -304,6 +374,7 @@ class BatchedCascadeEngine:
         self.updates_per_tick = updates_per_tick
         self.max_delay = int(max_delay)
         self.pipeline_depth = int(pipeline_depth)
+        self.per_lane = bool(per_lane)
         self.mesh = mesh
         if mesh is not None:
             from repro.sharding import (lane_count, put_lanes,
@@ -362,6 +433,16 @@ class BatchedCascadeEngine:
         # double-buffered deferred-lane queue: routed ticks whose expert
         # annotations are still in flight (at most max_delay + 1 deep)
         self._pending: deque = deque()
+        # per-lane annotation-commit accounting: ages in ticks, latencies
+        # in seconds, aggregated over every committed lane (both commit
+        # modes).  commit_log records (submit_tick, lane, commit_tick)
+        # per lane, but ONLY in the unbounded-diagnostics mode
+        # (history_limit=None): with bounded or disabled history the log
+        # stays off too, so long-serving memory stays bounded (the
+        # queue-drain invariant tests and pool_throughput read it)
+        self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
+        self.commit_log: Optional[list] = (
+            [] if history_limit is None else None)
         # route pipeline: dispatched-but-unresolved ticks (<= pipeline_depth
         # deep), the speculative route-time beta/item counters that track
         # the resolve-time state through the identical recurrence, and the
@@ -405,6 +486,9 @@ class BatchedCascadeEngine:
         self._state_version += 1
         for k in self.pipeline_stats:
             self.pipeline_stats[k] = 0
+        self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
+        if self.commit_log is not None:
+            self.commit_log.clear()
 
     # -- aggregates -----------------------------------------------------
     @property
@@ -449,15 +533,10 @@ class BatchedCascadeEngine:
                 new_cy.append(cy_t[i].at[slot].set(y_full, mode="drop"))
             return tuple(new_cx), tuple(new_cy)
 
-        if self.mesh is not None:
-            # pin the ring buffers replicated so the donated outputs
-            # match the inputs' placement tick after tick; the lane-dim
-            # cumsum/scatter over sharded `called`/`feats` lowers to the
-            # collectives GSPMD inserts for the cross-lane insert order
-            self._scatter = jax.jit(scatter, donate_argnums=(0, 1),
-                                    out_shardings=self._rep_sharding)
-        else:
-            self._scatter = jax.jit(scatter, donate_argnums=(0, 1))
+        # ring buffers donated; with a mesh the outputs stay pinned
+        # replicated so the donation chain survives the per-lane commit
+        # mode's one-scatter-per-lane cadence (sharding.jit_cache_scatter)
+        self._scatter = jit_cache_scatter(scatter, self.mesh)
         self._bs_list = bs_list
 
     def _bucket(self, n: int) -> int:
@@ -483,9 +562,15 @@ class BatchedCascadeEngine:
                            for i, d in zip(idxs, docs)], np.int32)
 
     def _expert_submit(self, idxs: Sequence[int], docs) -> ExpertTicket:
-        """Enqueue a batch annotation; experts without the async
-        interface resolve synchronously (still one batched call)."""
-        sub = getattr(self.expert, "submit", None)
+        """Enqueue a batch annotation.  Experts with a worker pool
+        (``submit_many``) get the batch sharded with per-item ticket
+        completion — what the per-lane commit drain consumes; experts
+        with only ``submit`` keep the PR-3 single-request path, and
+        experts without the async interface resolve synchronously
+        (still one batched call)."""
+        sub = getattr(self.expert, "submit_many", None)
+        if sub is None:
+            sub = getattr(self.expert, "submit", None)
         if sub is not None:
             return sub(idxs, docs)
         return ExpertTicket(labels=self._expert_label_batch(idxs, docs))
@@ -538,8 +623,7 @@ class BatchedCascadeEngine:
                 self.pipeline_stats["budget_fences"] += 1
                 while self._ring:
                     outs.append(self._route_resolve(self._ring.popleft()))
-        while (self._ring and self._pending
-               and self._pending[0].t + self.max_delay <= self.t):
+        while self._ring and self._commit_due():
             # a commit is due while the ring drains: dispatching now is
             # guaranteed stale — resolve past the commit first
             self.pipeline_stats["update_fences"] += 1
@@ -548,6 +632,19 @@ class BatchedCascadeEngine:
         while len(self._ring) > self.pipeline_depth:
             outs.append(self._route_resolve(self._ring.popleft()))
         return outs
+
+    def _commit_due(self) -> bool:
+        """True when the pending queue's head has lanes whose deadline
+        falls at/before the end of the current tick — i.e. a dispatch
+        issued now is guaranteed to read pre-commit params.  Per-tick
+        mode reduces to the PR-3 condition (head tick's age reached
+        max_delay); per-lane mode also fires on the intermediate
+        sub-deadlines of the spread schedule (``lanes_due``)."""
+        if not self._pending:
+            return False
+        rec = self._pending[0]
+        return lanes_due(rec.sel_c.size, self.t - rec.t, self.max_delay,
+                         self.per_lane) > rec.committed
 
     def resolve_tick(self) -> Optional[dict]:
         """Resolve the oldest in-flight tick (stage B); None if empty."""
@@ -606,10 +703,16 @@ class BatchedCascadeEngine:
         u_jump = np.empty((nlev, S))
         u_act = np.empty((nlev, S), np.float32)
         cache_rngs = None
+        # per-lane commit mode samples each lane's cache mini-batch with
+        # the LANE'S OWN tick generators (the sequential reference's
+        # per-item rule); per-tick mode only needs the lane-0 purpose
+        lane_cache = [] if self.per_lane else None
         for s in range(S):
             r = tick_rngs(cfg.seed, s, t, nlev)
             u_jump[:, s] = r.jump.random(nlev)
             u_act[:, s] = r.action.random(nlev).astype(np.float32)
+            if lane_cache is not None:
+                lane_cache.append(r.cache)
             if s == 0:
                 cache_rngs = r.cache
 
@@ -651,7 +754,7 @@ class BatchedCascadeEngine:
             jump=jump, u_act=u_act, budget_ok=budget_ok,
             cache_rngs=cache_rngs, feats_cache=feats_cache, sel0=sel0,
             xb0=xb0, handles=handles, version=self._state_version,
-            beta_after=list(self._route_beta))
+            beta_after=list(self._route_beta), lane_cache=lane_cache)
 
     def _route_resolve(self, rec: _InFlightTick) -> dict:
         """Stage B: host routing, expert submit, commits, accounting.
@@ -814,7 +917,11 @@ class BatchedCascadeEngine:
             prec = _PendingTick(
                 ticket=ticket, t=t, called=called.copy(), sel_c=sel_c,
                 feats=[scatter_feats(i) for i in range(nlev)],
-                probs=probs_h, dprob=dprob_h, cache_rngs=cache_rngs)
+                probs=probs_h, dprob=dprob_h, cache_rngs=cache_rngs,
+                lane_cache_rngs=(
+                    [rec.lane_cache[s] for s in sel_c]
+                    if self.per_lane else None),
+                wall=time.time())
 
         if prec is not None:
             self._pending.append(prec)
@@ -825,9 +932,10 @@ class BatchedCascadeEngine:
         # annotations (the PR-2 beta-floor calibration signal) could be
         # starved for arbitrarily many ticks.  Blocks on the expert if it
         # is slower than max_delay ticks of student compute —
-        # deterministic for any expert latency
-        while self._pending and t - self._pending[0].t >= self.max_delay:
-            self._commit(self._pending.popleft())
+        # deterministic for any expert latency.  Per-lane mode drains on
+        # the finer lanes_due sub-deadline schedule instead of whole
+        # ticks at age D (see _drain_due).
+        self._drain_due(t)
 
         # sync the observable beta to the value the dispatch-time
         # recurrence produced for this tick (see _route_dispatch — one
@@ -865,8 +973,43 @@ class BatchedCascadeEngine:
                               if resolved else np.full(S, -1, np.int32)),
         }
 
-    # -- commit: apply one routed tick's landed annotations --------------
-    def _commit(self, rec: _PendingTick) -> None:
+    # -- commit: apply routed ticks' landed annotations ------------------
+    def _drain_due(self, t: int) -> None:
+        """Commit every annotation whose deadline has passed by the end
+        of tick ``t``, in strict (submit-tick, lane) order.
+
+        The queue head is drained up to its ``lanes_due`` cursor; the
+        drain only advances to the next record once the head is FULLY
+        committed (so a younger tick's early sub-deadlines never leapfrog
+        an older tick's late ones — the deterministic global order the
+        per-lane exactness contract rests on).  The head at age
+        ``max_delay`` always commits fully, so the bound holds for every
+        record."""
+        while self._pending:
+            rec = self._pending[0]
+            k = rec.sel_c.size
+            due = lanes_due(k, t - rec.t, self.max_delay, self.per_lane)
+            if due > rec.committed:
+                if self.per_lane:
+                    for j in range(rec.committed, due):
+                        self._commit_lane(rec, j, t)
+                else:
+                    self._commit(rec, t)
+            if rec.committed < k:
+                break
+            self._pending.popleft()
+
+    def _record_commit(self, rec: _PendingTick, lanes, t: int) -> None:
+        """Aggregate per-lane commit age/latency stats (and the per-lane
+        commit log when history is enabled)."""
+        n = len(lanes)
+        self.commit_stats["lanes"] += n
+        self.commit_stats["age_sum"] += n * (t - rec.t)
+        self.commit_stats["wall_sum"] += n * (time.time() - rec.wall)
+        if self.commit_log is not None:
+            self.commit_log.extend((rec.t, int(s), t) for s in lanes)
+
+    def _commit(self, rec: _PendingTick, t: Optional[int] = None) -> None:
         """Apply a routed tick's expert annotations: ring-buffer scatter
         plus the per-tick weighted student/deferral updates, exactly the
         synchronous engine's update block replayed in FIFO tick order
@@ -925,9 +1068,79 @@ class BatchedCascadeEngine:
             lvl.apply_deferral_update(
                 self._put_lane(probs_b), self._put_lane(y_b),
                 self._put_lane(reach_b), self._put_lane(w_b), k_arr)
+        rec.committed = k
+        self._record_commit(rec, rec.sel_c, self.t if t is None else t)
         # params/dparams changed: any route forward dispatched before
         # this commit is stale (the pipeline's resolve checks and
         # refetches against the new state)
+        self._state_version += 1
+
+    def _commit_lane(self, rec: _PendingTick, j: int, t: int) -> None:
+        """Apply ONE lane's landed annotation (per-lane commit mode).
+
+        The sequential reference's per-item update block, replayed for
+        called lane ``sel_c[j]`` of the tick routed at ``rec.t``:
+        single-demonstration ring-buffer scatter into every level, one
+        student step on a cache mini-batch sampled with the lane's own
+        tick generators, and a single-item deferral/gate update — all
+        through the same jitted callables as every other path.  Blocks
+        only on the ticket shard holding item ``j`` (``result_slice``);
+        earlier lanes of the record have already committed (the drain
+        advances ``committed`` strictly in lane order)."""
+        cfg = self.cfg
+        nlev = len(self.levels)
+        s = int(rec.sel_c[j])
+        y = rec.ticket.result_slice(j, j + 1)
+        S = rec.called.shape[0]
+        y_full = np.zeros(S, np.int32)
+        y_full[s] = y[0]
+        called_one = np.zeros(S, bool)
+        called_one[s] = True
+        ptr_pre = np.asarray(self._cache_ptr, np.int32)
+        idx_t = []
+        rngs = rec.lane_cache_rngs[j]
+        for i, lvl in enumerate(self.levels):
+            size = lvl.spec.cache_size
+            self._cache_n[i] = min(self._cache_n[i] + 1, size)
+            self._cache_ptr[i] = (self._cache_ptr[i] + 1) % size
+            idx_t.append(jnp.asarray(sample_cache_indices(
+                rngs[i], self._cache_n[i],
+                self._bs_list[i]).astype(np.int32)))
+        if rec.feats_dev is None:
+            # the tick's feature rows are shared by all its per-lane
+            # scatters — upload once per record, not once per lane
+            rec.feats_dev = [self._put_lane(rec.feats[i])
+                             for i in range(nlev)]
+        new_cx, new_cy = self._scatter(
+            tuple(self._cache_x), tuple(self._cache_y),
+            tuple(rec.feats_dev),
+            self._put_lane(y_full), self._put_lane(called_one),
+            jnp.asarray(ptr_pre))
+        self._cache_x = list(new_cx)
+        self._cache_y = list(new_cy)
+        # reach[l] = prod_{k<l} dprob[k] at this lane, float32 left fold
+        # like the reference's running product
+        reach = np.float32(1.0)
+        B_c = self._bucket(1)
+        for i, lvl in enumerate(self.levels):
+            xb = self._cache_x[i][idx_t[i]]
+            yb = self._cache_y[i][idx_t[i]]
+            w = jnp.ones((self._bs_list[i],), jnp.float32)
+            lvl.apply_student_update(xb, yb, w)
+            probs_b = np.zeros((B_c, cfg.n_classes), np.float32)
+            probs_b[0] = rec.probs[i, s]
+            y_b = np.zeros(B_c, np.int32)
+            y_b[0] = y[0]
+            reach_b = np.zeros(B_c, np.float32)
+            reach_b[0] = reach
+            w_b = np.zeros(B_c, np.float32)
+            w_b[0] = 1.0
+            lvl.apply_deferral_update(
+                self._put_lane(probs_b), self._put_lane(y_b),
+                self._put_lane(reach_b), self._put_lane(w_b))
+            reach = np.float32(reach * np.float32(rec.dprob[i, s]))
+        rec.committed = j + 1
+        self._record_commit(rec, [s], t)
         self._state_version += 1
 
     def flush(self) -> int:
@@ -946,7 +1159,12 @@ class BatchedCascadeEngine:
                 "(and consume their outputs) before flush()")
         n = 0
         while self._pending:
-            self._commit(self._pending.popleft())
+            rec = self._pending.popleft()
+            if self.per_lane:
+                for j in range(rec.committed, rec.sel_c.size):
+                    self._commit_lane(rec, j, self.t)
+            else:
+                self._commit(rec, self.t)
             n += 1
         return n
 

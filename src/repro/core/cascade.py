@@ -99,6 +99,11 @@ def default_cascade_config(n_classes: int, mu: float = 2e-6,
                          tf_spec=tf_spec, seed=seed)
 
 
+# The four per-level state trees that define a cascade's learned state.
+# Every parity contract in tests/ (and the shared tests/harness.py) compares
+# engines leaf-by-leaf over exactly these attributes of each _Level.
+STATE_ATTRS = ("params", "opt_state", "dparams", "dopt_state")
+
 _HISTORY_KEYS = ("level", "pred", "expert_called", "cost", "J")
 
 

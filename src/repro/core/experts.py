@@ -9,29 +9,41 @@
   end-to-end example so the full pipeline (featurize -> students -> deferral
   -> expert forward -> online updates) exercises real compute.
 
-Async annotation interface (``submit``/``poll``)
-------------------------------------------------
+Async annotation interface (``submit``/``submit_many``/``poll``)
+----------------------------------------------------------------
 At serving scale the expert forward is the latency wall, so both experts
 expose a two-phase interface the batched engine's deferred-lane queue
 drives (core/batched.py ``max_delay``):
 
-  ``ticket = expert.submit(idxs, docs)``   # enqueue a batch annotation
-  ``labels = expert.poll(ticket)``         # block until done
-  ``expert.poll(ticket, block=False)``     # None while still in flight
+  ``ticket = expert.submit(idxs, docs)``        # one batch, one request
+  ``ticket = expert.submit_many(idxs, docs)``   # sharded over the pool
+  ``labels = expert.poll(ticket)``              # block until ALL done
+  ``expert.poll(ticket, block=False)``          # None while in flight
+  ``expert.poll_partial(ticket)``               # (ready_mask, labels)
 
-``SimulatedExpert`` resolves tickets inline (its labels are a table
-lookup — there is nothing to overlap).  ``ModelExpert`` runs the batched
-forward on a background thread, so the host-side expert compute overlaps
-the next tick's student compute; jitted JAX dispatch is thread-safe and
-releases the GIL while the device executes.  Either way the ticket for a
-given (idxs, docs) batch resolves to exactly the labels ``label_batch``
-would have returned synchronously — delay never changes annotations.
+``submit_many`` splits the batch into ``min(workers, k)`` contiguous
+shards (``shard_bounds`` — a pure function of (k, workers), never of
+worker timing) and annotates them on W concurrent workers; the returned
+``ExpertTicket`` tracks **per-item completion**, so the engine's
+per-lane commit drain (``BatchedCascadeEngine(per_lane=True)``) can
+block on exactly the prefix it needs (``result_slice``) instead of the
+whole batch.  ``SimulatedExpert`` resolves labels lazily *at poll time*
+(never at submit — an optional fake latency, counted in non-blocking
+``done()`` probes, makes its tickets genuinely in-flight so delay/pool
+tests exercise the real poll path).  ``ModelExpert`` runs each shard's
+batched forward on a pool thread, so the host-side expert compute
+overlaps the engine's next-tick student compute; jitted JAX dispatch is
+thread-safe and releases the GIL while the device executes.  Either way
+a ticket resolves to exactly the labels ``label_batch`` would have
+returned synchronously on each shard — delay and worker count never
+change annotations for the table-lookup expert, and are deterministic
+functions of (k, workers) for the model expert.
 """
 from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,31 +56,137 @@ from repro.models.students import (
 from repro.optim import adam
 
 
+def shard_bounds(k: int, workers: int) -> List[Tuple[int, int]]:
+    """Contiguous balanced split of ``k`` items into ``min(workers, k)``
+    shards: shard j covers ``[j*k//w, (j+1)*k//w)``.
+
+    A pure function of (k, workers) — never of worker timing — so a
+    pooled annotation's shard layout (and therefore, for a model expert,
+    its per-shard batched forwards) is deterministic.  Contiguous shards
+    match the engine's (tick, lane) commit order: the per-lane drain
+    blocks on a prefix, which touches the fewest shards possible.
+    """
+    if k <= 0:
+        return []
+    w = max(1, min(int(workers), k))
+    edges = [(j * k) // w for j in range(w + 1)]
+    return [(edges[j], edges[j + 1]) for j in range(w)]
+
+
 class ExpertTicket:
     """Handle for one in-flight batched annotation request.
 
-    Wraps either an already-resolved label array (synchronous experts) or
-    a ``concurrent.futures.Future`` producing one (thread-backed experts).
+    The ticket is a list of contiguous *shards*, each either an already
+    resolved ``np.ndarray`` of labels or a future-like object exposing
+    ``done()``/``result()`` (``concurrent.futures.Future`` for
+    thread-backed experts, ``_SimulatedAnnotation`` for the fake-latency
+    simulated expert).  Per-item completion is observable through
+    ``item_done``/``ready_mask``, and ``result_slice`` blocks on exactly
+    the shards overlapping the requested range — the primitive the
+    engine's per-lane commit drain is built on.
     """
 
-    __slots__ = ("_labels", "_future")
+    __slots__ = ("_shards",)
 
-    def __init__(self, labels: Optional[np.ndarray] = None, future=None):
-        if (labels is None) == (future is None):
-            raise ValueError("exactly one of labels/future required")
-        self._labels = labels
-        self._future = future
+    def __init__(self, labels: Optional[np.ndarray] = None, future=None,
+                 shards: Optional[Sequence] = None):
+        if sum(x is not None for x in (labels, future, shards)) != 1:
+            raise ValueError(
+                "exactly one of labels/future/shards required")
+        if labels is not None:
+            labels = np.asarray(labels, np.int32)
+            self._shards = [[0, len(labels), labels]]
+        elif future is not None:
+            # length unknown until resolution (legacy single-future form)
+            self._shards = [[0, None, future]]
+        else:
+            self._shards = [[int(lo), int(hi), payload]
+                            for lo, hi, payload in shards]
 
+    # -- internals ------------------------------------------------------
+    def _resolve(self, shard) -> np.ndarray:
+        if not isinstance(shard[2], np.ndarray):
+            shard[2] = np.asarray(shard[2].result(), np.int32)
+            if shard[1] is None:
+                shard[1] = shard[0] + len(shard[2])
+        return shard[2]
+
+    @staticmethod
+    def _shard_done(shard) -> bool:
+        return isinstance(shard[2], np.ndarray) or shard[2].done()
+
+    def _settle_bounds(self, shard) -> None:
+        """Resolve a shard whose upper bound is unknown (the legacy
+        ``future=`` form) once it is done, so per-item queries can
+        bound-check without blocking on in-flight work."""
+        if shard[1] is None and self._shard_done(shard):
+            self._resolve(shard)
+
+    def _n_items(self) -> int:
+        last = self._shards[-1] if self._shards else None
+        if last is None:
+            return 0
+        self._settle_bounds(last)
+        if last[1] is None:
+            raise ValueError("ticket length unknown while its legacy "
+                             "future-form shard is still in flight")
+        return int(last[1])
+
+    # -- whole-ticket interface (the PR-3 per-tick commit path) ---------
     def done(self) -> bool:
-        """True once the labels are available without blocking."""
-        return self._future is None or self._future.done()
+        """True once every item's labels are available without blocking.
+
+        Probes EVERY shard (no short-circuit), so fake-latency shards
+        (``_SimulatedAnnotation`` credits) drain uniformly — one credit
+        per shard per whole-ticket poll, the same rate ``ready_mask``
+        consumes them."""
+        return all([self._shard_done(s) for s in self._shards])
 
     def result(self) -> np.ndarray:
-        """Block until the labels are available and return them."""
-        if self._future is not None:
-            self._labels = np.asarray(self._future.result(), np.int32)
-            self._future = None
-        return self._labels
+        """Block until every shard resolves; return all labels in order."""
+        if not self._shards:
+            return np.zeros((0,), np.int32)
+        return np.concatenate([self._resolve(s) for s in self._shards])
+
+    # -- per-item interface (the per-lane commit path) ------------------
+    def item_done(self, i: int) -> bool:
+        """True once item ``i``'s label is available without blocking.
+
+        Raises IndexError for out-of-range ``i``; while a legacy
+        future-form shard is still in flight its length is unknown, so
+        indices past its start conservatively report not-done."""
+        for shard in self._shards:
+            self._settle_bounds(shard)
+            lo, hi = shard[0], shard[1]
+            if lo <= i and (hi is None or i < hi):
+                return self._shard_done(shard)
+        raise IndexError(i)
+
+    def ready_mask(self) -> np.ndarray:
+        """(n,) bool — which items are resolvable without blocking."""
+        for shard in self._shards:
+            self._settle_bounds(shard)
+        mask = np.zeros(self._n_items(), bool)
+        for shard in self._shards:
+            mask[shard[0]:shard[1]] = self._shard_done(shard)
+        return mask
+
+    def result_slice(self, lo: int, hi: int) -> np.ndarray:
+        """Labels for items ``[lo, hi)``, blocking only on the shards
+        that overlap the range (other shards stay in flight)."""
+        parts = []
+        for s in self._shards:
+            s_lo, s_hi = s[0], s[1]
+            if s_hi is not None and (s_hi <= lo or s_lo >= hi):
+                continue
+            labels = self._resolve(s)
+            s_hi = s[1]
+            if s_hi <= lo or s_lo >= hi:
+                continue
+            parts.append(labels[max(lo - s_lo, 0):hi - s_lo])
+        if not parts:
+            return np.zeros((0,), np.int32)
+        return np.concatenate(parts)
 
 
 def poll_ticket(ticket: ExpertTicket,
@@ -79,14 +197,84 @@ def poll_ticket(ticket: ExpertTicket,
     return ticket.result()
 
 
+def poll_ticket_partial(
+        ticket: ExpertTicket) -> Tuple[np.ndarray, np.ndarray]:
+    """Non-blocking partial poll: ``(ready_mask, labels)``.
+
+    ``labels[i]`` is valid only where ``ready_mask[i]``; unready slots
+    hold -1 (the same in-flight sentinel the engine's tick outputs use).
+    """
+    mask = ticket.ready_mask()
+    labels = np.full(mask.shape, -1, np.int32)
+    lo = 0
+    while lo < mask.size:
+        if not mask[lo]:
+            lo += 1
+            continue
+        hi = lo
+        while hi < mask.size and mask[hi]:
+            hi += 1
+        labels[lo:hi] = ticket.result_slice(lo, hi)
+        lo = hi
+    return mask, labels
+
+
+LatencyLike = Union[None, int, Callable[[int, int], int]]
+
+
+class _SimulatedAnnotation:
+    """Future-like shard payload for ``SimulatedExpert``.
+
+    Labels are computed lazily at resolution (``result``), never at
+    submit — so the engine's poll path is exercised for real.  The fake
+    latency is counted in non-blocking ``done()`` probes: each probe
+    consumes one credit, and the shard reports ready once its credits
+    run out.  The engine polls once per tick boundary, so a credit is
+    roughly one tick of simulated annotation latency.  ``result()``
+    always resolves (a blocking poll "waits out" the remaining latency)
+    — latency shifts *when* labels are observable, never *what* they
+    are.
+    """
+
+    __slots__ = ("_fn", "_credits")
+
+    def __init__(self, fn: Callable[[], np.ndarray], credits: int):
+        self._fn = fn
+        self._credits = max(int(credits), 0)
+
+    def done(self) -> bool:
+        if self._credits > 0:
+            self._credits -= 1
+            return False
+        return True
+
+    def result(self) -> np.ndarray:
+        self._credits = 0
+        return self._fn()
+
+
 class SimulatedExpert:
-    """Zero-compute expert replaying precomputed noisy-LLM labels."""
+    """Zero-compute expert replaying precomputed noisy-LLM labels.
+
+    ``workers`` sets how many shards ``submit_many`` splits a batch into
+    (mirroring ``ModelExpert``'s pool so the engine's per-lane drain
+    sees the same per-item ticket shape).  ``latency`` simulates
+    annotation delay: an int applies to every shard; a callable
+    ``(submit_seq, shard_idx) -> int`` scripts adversarial per-shard
+    schedules (credits are consumed by non-blocking ``done()`` probes —
+    see ``_SimulatedAnnotation``).  Labels are a pure table lookup, so
+    they are invariant to workers and latency by construction.
+    """
 
     def __init__(self, stream: Stream, name: str = "gpt-3.5-turbo",
-                 cost: float = 1.0e6):
+                 cost: float = 1.0e6, *, workers: int = 1,
+                 latency: LatencyLike = None):
         self.name = name
         self.cost = cost
+        self.workers = max(int(workers), 1)
+        self.latency = latency
         self._labels = stream.expert_labels(name)
+        self._submit_seq = 0
 
     def label(self, idx: int, doc: np.ndarray) -> int:
         """Annotate one stream item (table lookup)."""
@@ -97,30 +285,68 @@ class SimulatedExpert:
         batched engine routes all deferrals of a tick through this)."""
         return self._labels[np.asarray(idxs, np.int64)].astype(np.int32)
 
-    # -- async interface (resolved inline: a table lookup has no latency
-    #    to overlap, but the engine drives one code path for all experts)
+    # -- async interface ------------------------------------------------
+    def _shard_delay(self, seq: int, j: int) -> int:
+        lat = self.latency
+        if lat is None:
+            return 0
+        if callable(lat):
+            return int(lat(seq, j))
+        return int(lat)
+
+    def _make_ticket(self, idxs, docs, nshards: int) -> ExpertTicket:
+        idx_arr = np.asarray(idxs, np.int64)
+        seq = self._submit_seq
+        self._submit_seq += 1
+        shards = []
+        for j, (lo, hi) in enumerate(shard_bounds(len(idx_arr), nshards)):
+            sel = idx_arr[lo:hi]
+            shards.append((lo, hi, _SimulatedAnnotation(
+                lambda sel=sel: self._labels[sel].astype(np.int32),
+                self._shard_delay(seq, j))))
+        return ExpertTicket(shards=shards)
+
     def submit(self, idxs, docs) -> ExpertTicket:
-        """Enqueue a batch annotation (resolved inline — no latency)."""
-        return ExpertTicket(labels=self.label_batch(idxs, docs))
+        """Enqueue a batch annotation as one lazily-resolving shard."""
+        return self._make_ticket(idxs, docs, 1)
+
+    def submit_many(self, idxs, docs) -> ExpertTicket:
+        """Enqueue a batch sharded into ``min(workers, k)`` lazily
+        resolving sub-requests with per-item completion."""
+        return self._make_ticket(idxs, docs, self.workers)
 
     def poll(self, ticket: ExpertTicket,
              block: bool = True) -> Optional[np.ndarray]:
         """Labels when ready, else None (non-blocking poll)."""
         return poll_ticket(ticket, block)
 
+    def poll_partial(self, ticket: ExpertTicket):
+        """Non-blocking partial poll: (ready_mask, labels-with--1)."""
+        return poll_ticket_partial(ticket)
+
 
 @dataclass
 class ModelExpert:
-    """A trained transformer classifier acting as the LLM expert."""
+    """A trained transformer classifier acting as the LLM expert.
+
+    ``workers`` sizes the annotation pool: ``submit_many`` splits a
+    batch into that many contiguous shards and runs each shard's batched
+    forward on its own pool thread, so a slow annotation batch never
+    serializes behind a single worker and the engine's per-lane commit
+    drain can consume early shards while later ones are still in flight.
+    """
+
     params: dict
     spec: TinyTFSpec
     name: str = "model-expert"
     cost: float = 1.0e6
+    workers: int = 1
     _executor: Optional[ThreadPoolExecutor] = field(
         default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         spec = self.spec
+        self.workers = max(int(self.workers), 1)
         self._predict = jax.jit(
             lambda p, ids: tinytf_predict(p, ids, spec))
 
@@ -139,32 +365,53 @@ class ModelExpert:
         probs = self._predict(self.params, jnp.asarray(ids))
         return np.asarray(jnp.argmax(probs, axis=-1), np.int32)
 
-    # -- async interface: the batched forward runs on a worker thread, so
-    #    the expert's host+device time overlaps the engine's next-tick
-    #    student compute (one worker keeps submission order = completion
-    #    order, which the engine's FIFO queue relies on)
-    def submit(self, idxs, docs) -> ExpertTicket:
-        """Enqueue a batch annotation on the worker thread."""
+    # -- async interface: shard forwards run on pool threads, so the
+    #    expert's host+device time overlaps the engine's next-tick
+    #    student compute (jitted dispatch releases the GIL while the
+    #    device executes; shard layout is deterministic — shard_bounds)
+    def _pool(self) -> ThreadPoolExecutor:
         if self._executor is None:
             self._executor = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix=self.name)
+                max_workers=self.workers, thread_name_prefix=self.name)
+        return self._executor
+
+    def submit(self, idxs, docs) -> ExpertTicket:
+        """Enqueue a batch annotation as ONE pool request (kept for the
+        per-tick commit path, where only whole-batch completion
+        matters)."""
         return ExpertTicket(
-            future=self._executor.submit(self.label_batch, list(idxs),
-                                         list(docs)))
+            future=self._pool().submit(self.label_batch, list(idxs),
+                                       list(docs)))
+
+    def submit_many(self, idxs, docs) -> ExpertTicket:
+        """Enqueue a batch sharded over the worker pool; the returned
+        ticket completes per item as each shard's forward lands."""
+        idxs = list(idxs)
+        docs = list(docs)
+        pool = self._pool()
+        shards = [
+            (lo, hi, pool.submit(self.label_batch, idxs[lo:hi],
+                                 docs[lo:hi]))
+            for lo, hi in shard_bounds(len(idxs), self.workers)]
+        return ExpertTicket(shards=shards)
 
     def poll(self, ticket: ExpertTicket,
              block: bool = True) -> Optional[np.ndarray]:
         """Labels when ready, else None (non-blocking poll)."""
         return poll_ticket(ticket, block)
 
+    def poll_partial(self, ticket: ExpertTicket):
+        """Non-blocking partial poll: (ready_mask, labels-with--1)."""
+        return poll_ticket_partial(ticket)
+
     def close(self) -> None:
-        """Reap the worker thread (long-lived processes that cycle
+        """Reap the pool threads (long-lived processes that cycle
         through many experts should call this; idempotent)."""
         if self._executor is not None:
             self._executor.shutdown(wait=True)
             self._executor = None
 
-    def __del__(self):  # best-effort: don't leak the worker at GC
+    def __del__(self):  # best-effort: don't leak the workers at GC
         try:
             self.close()
         except Exception:
@@ -176,7 +423,8 @@ def train_model_expert(stream: Stream, n_classes: int,
                        epochs: int = 3, batch: int = 32,
                        lr: float = 1e-3, seed: int = 0,
                        max_samples: Optional[int] = None,
-                       cost: float = 1.0e6) -> ModelExpert:
+                       cost: float = 1.0e6,
+                       workers: int = 1) -> ModelExpert:
     """Train the stand-in LLM on ground truth (offline, before serving)."""
     spec = TinyTFSpec(d_model=d_model, n_layers=n_layers, d_ff=4 * d_model,
                       n_classes=n_classes)
@@ -203,4 +451,4 @@ def train_model_expert(stream: Stream, n_classes: int,
             params, state, _ = step(params, state,
                                     jnp.asarray(ids[sel]),
                                     jnp.asarray(labels[sel]))
-    return ModelExpert(params=params, spec=spec, cost=cost)
+    return ModelExpert(params=params, spec=spec, cost=cost, workers=workers)

@@ -80,19 +80,22 @@ def probe_route(cascade: OnlineCascade, doc, tick: int) -> bool:
     return True
 
 
-def _make_expert(stream, n_classes, expert_kind, samples, seed):
+def _make_expert(stream, n_classes, expert_kind, samples, seed,
+                 workers: int = 1):
     if expert_kind == "model":
         print("training stand-in LLM expert ...", flush=True)
         return train_model_expert(stream, n_classes, epochs=2,
-                                  max_samples=min(4000, samples), seed=seed)
-    return SimulatedExpert(stream, "gpt-3.5-turbo")
+                                  max_samples=min(4000, samples), seed=seed,
+                                  workers=workers)
+    return SimulatedExpert(stream, "gpt-3.5-turbo", workers=workers)
 
 
 def serve_stream_batched(dataset: str, samples: int, mu: float,
                          batch: int = 64, expert_kind: str = "model",
                          seed: int = 0, log_every: int = 500,
                          mesh=None, updates_per_tick: str = "single",
-                         async_delay: int = 0, pipeline_depth: int = 0):
+                         async_delay: int = 0, pipeline_depth: int = 0,
+                         expert_workers: int = 1, per_lane: bool = False):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -106,11 +109,15 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     ``pipeline_depth >= 1`` additionally overlaps the route passes
     themselves: up to that many ticks' level-0 forwards stay in flight
     while older ticks' host routing resolves, with results unchanged
-    (core/batched.py pipelined route mode).  All three compose."""
+    (core/batched.py pipelined route mode).  ``expert_workers >= 2``
+    sizes the expert annotation pool (sharded ``submit_many`` tickets),
+    and ``per_lane=True`` commits each lane's annotation on the spread
+    sub-deadline schedule with per-item updates (core/batched.py
+    per-lane commit mode — pair it with the pool).  All of it composes."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
-                          samples, seed)
+                          samples, seed, workers=expert_workers)
     cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
                                  seed=seed, expert_cost=expert.cost)
     # history_limit=0: the serving loop only reads aggregate metrics, so
@@ -119,6 +126,7 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                                   updates_per_tick=updates_per_tick,
                                   max_delay=async_delay,
                                   pipeline_depth=pipeline_depth,
+                                  per_lane=per_lane,
                                   history_limit=0)
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
@@ -133,6 +141,14 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
         lanes += (f" pipeline_depth={pipeline_depth} "
                   f"(refetches={st['refetches']} "
                   f"fences={st['update_fences'] + st['budget_fences']})")
+    if expert_workers > 1 or per_lane:
+        lanes += (f" expert_workers={expert_workers}"
+                  f" commit={'lane' if per_lane else 'tick'}")
+    cs = engine.commit_stats
+    if cs["lanes"]:
+        print(f"annotation commits: {cs['lanes']} lanes, "
+              f"mean age {cs['age_sum'] / cs['lanes']:.2f} ticks, "
+              f"mean latency {cs['wall_sum'] / cs['lanes'] * 1e3:.1f} ms")
     print(f"\nserved {len(stream)} queries in {dt:.1f}s "
           f"({metrics['items_per_sec']:.0f} items/s, {lanes})")
     print(f"accuracy={metrics['accuracy']:.4f}  "
@@ -273,6 +289,23 @@ def main():
                          "levels and expert calls are identical for any "
                          "P (update ticks fence the pipeline); 0 = "
                          "unpipelined")
+    ap.add_argument("--expert-workers", type=int, default=1,
+                    help="expert annotation pool size W (batched "
+                         "engine): >=2 shards each deferred batch over "
+                         "W concurrent annotation workers "
+                         "(expert.submit_many) with per-item ticket "
+                         "completion; annotations and routing are "
+                         "invariant to W — only latency/throughput "
+                         "change")
+    ap.add_argument("--per-lane-commit", action="store_true",
+                    help="per-lane commit granularity (batched engine, "
+                         "with --async-delay >= 2): each lane's "
+                         "annotation commits on a deterministic "
+                         "sub-deadline inside the delay window as a "
+                         "per-item update (mean commit age ~(D+1)/2 "
+                         "instead of D), in strict (tick, lane) order; "
+                         "results are bitwise invariant to worker "
+                         "count/latency")
     ap.add_argument("--microbatch", type=int, default=16,
                     help="expert micro-batch size (sequential engine): "
                          "the probe/replay pass batches this many "
@@ -295,7 +328,9 @@ def main():
                              mesh=parse_mesh_spec(args.mesh),
                              updates_per_tick=args.updates,
                              async_delay=args.async_delay,
-                             pipeline_depth=args.pipeline_depth)
+                             pipeline_depth=args.pipeline_depth,
+                             expert_workers=args.expert_workers,
+                             per_lane=args.per_lane_commit)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed)

@@ -122,6 +122,23 @@ def jit_route_pass(fn, mesh: Optional[Mesh] = None):
     return jax.jit(fn, donate_argnums=(2,))
 
 
+def jit_cache_scatter(fn, mesh: Optional[Mesh] = None):
+    """Jit the demonstration ring-buffer scatter ``fn(cx, cy, feats, y,
+    called, ptr)`` with the ring buffers donated.
+
+    The buffers mutate in place instead of copying — and with a mesh the
+    outputs are pinned replicated so the donated buffers keep the same
+    placement call after call.  Placement stability matters doubly in
+    per-lane commit mode (core/batched.py ``per_lane=True``), where the
+    scatter runs once per committed *lane* rather than once per tick:
+    any placement drift would break the donation chain on every lane.
+    """
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=(0, 1))
+    return jax.jit(fn, donate_argnums=(0, 1),
+                   out_shardings=replicated_sharding(mesh))
+
+
 def host_prefetch(arrays) -> None:
     """Start async device->host copies for ``arrays`` (non-blocking).
 

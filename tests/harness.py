@@ -1,0 +1,159 @@
+"""Shared parity harness for the engine test suite.
+
+Every engine feature — batching, lane sharding, the async expert queue,
+pipelined route passes, the expert pool / per-lane commit drain — must
+pass the SAME contract: on identical tick keys it reproduces the
+reference's predictions, chosen levels, and expert-call counts, and
+(unless the feature documents a float-tolerance carve-out, e.g. SPMD
+reduction reassociation) bitwise-identical parameters and optimizer
+state.  Before this harness the contract lived as four copy-pasted
+loops in test_batched / test_sharded / test_async / test_pipelined;
+those files (including the multi-device subprocess snippets, which add
+tests/ to sys.path) now all drive these helpers, and any new engine
+feature should too.
+
+The helpers deliberately accept both engine shapes: the sequential
+``OnlineCascade`` (scalar accounting, per-item history) and the
+``BatchedCascadeEngine`` (per-lane accounting, per-tick array history).
+"""
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.core import (BatchedCascadeEngine, OnlineCascade,
+                        SimulatedExpert, default_cascade_config)
+from repro.core.cascade import STATE_ATTRS
+from repro.data import make_stream
+
+EXPERT_NAME = "gpt-3.5-turbo"
+
+# The documented float tolerance for lane-sharded runs: SPMD partitioning
+# may reassociate the weighted-update reductions at the ulp level.
+MESH_RTOL = 1e-4
+MESH_ATOL = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# fixtures: streams, configs, engines (the shared tick-key discipline)
+# ---------------------------------------------------------------------------
+def make_setup(mu, n, dataset="imdb", seed=0, **cfg_kw):
+    """Stream + cascade config sharing one tick-key universe.
+
+    Engines built from the same (dataset, seed, mu, cfg_kw) draw
+    identical per-tick RNG (core/rng.py), which is what every parity
+    assertion below relies on.  ``cfg_kw`` are ``CascadeConfig`` field
+    overrides (hard_budget, sample_actions, ...).
+    """
+    stream = make_stream(dataset, seed=seed, n_samples=n)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
+                                 seed=seed)
+    if cfg_kw:
+        cfg = replace(cfg, **cfg_kw)
+    return stream, cfg
+
+
+def make_expert(stream, **kw):
+    """The stream's simulated noisy-LLM expert (table lookup)."""
+    return SimulatedExpert(stream, EXPERT_NAME, **kw)
+
+
+def sequential_engine(cfg, stream, **kw):
+    """The per-item Algorithm-1 reference loop (the semantics oracle)."""
+    return OnlineCascade(cfg, make_expert(stream), **kw)
+
+
+def batched_engine(cfg, stream, n_streams=1, expert_kw=None, **kw):
+    """A BatchedCascadeEngine over the stream's simulated expert;
+    ``expert_kw`` (workers=, latency=) configures the expert pool."""
+    return BatchedCascadeEngine(cfg, make_expert(stream,
+                                                 **(expert_kw or {})),
+                                n_streams=n_streams, **kw)
+
+
+# ---------------------------------------------------------------------------
+# state equality
+# ---------------------------------------------------------------------------
+def state_leaves(levels, attrs=STATE_ATTRS):
+    """Flat list of every state-tree leaf across levels, in a stable
+    (level, attr, leaf) order — the canonical comparison layout."""
+    return [np.asarray(x) for lvl in levels for attr in attrs
+            for x in jax.tree.leaves(getattr(lvl, attr))]
+
+
+def assert_state_equal(a_levels, b_levels, attrs=STATE_ATTRS,
+                       rtol=None, atol=0.0):
+    """Leaf-by-leaf state comparison: bitwise when ``rtol`` is None,
+    else allclose (the mesh carve-out)."""
+    a_leaves = state_leaves(a_levels, attrs)
+    b_leaves = state_leaves(b_levels, attrs)
+    assert len(a_leaves) == len(b_leaves)
+    for a, b in zip(a_leaves, b_leaves):
+        if rtol is None:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=rtol, atol=atol)
+
+
+def states_equal(a_levels, b_levels, attrs=STATE_ATTRS) -> bool:
+    """Boolean form of the bitwise comparison (for tests that assert a
+    state has NOT changed yet, e.g. delay-timing tests)."""
+    return all(bool(np.array_equal(a, b))
+               for a, b in zip(state_leaves(a_levels, attrs),
+                               state_leaves(b_levels, attrs)))
+
+
+# ---------------------------------------------------------------------------
+# the parity contract
+# ---------------------------------------------------------------------------
+def flat_history(engine, key):
+    """An engine's per-item history for ``key``, flattened to one 1-D
+    array (sequential: list of scalars; batched: list of per-tick
+    lane arrays — identical tick shapes concatenate identically)."""
+    h = engine.history[key]
+    if len(h) and np.ndim(h[0]):
+        return np.concatenate([np.asarray(x) for x in h])
+    return np.asarray(list(h))
+
+
+def expert_calls_total(engine) -> int:
+    """Total expert calls (scalar for sequential, per-lane summed for
+    batched)."""
+    return int(np.sum(engine.expert_calls))
+
+
+def run_pair(ref, new, stream):
+    """Serve ``stream`` on both engines; returns (m_ref, m_new)."""
+    return ref.run(stream), new.run(stream)
+
+
+def assert_run_parity(ref, m_ref, new, m_new, *, state="bitwise",
+                      history_keys=("level",), costs=False,
+                      attrs=STATE_ATTRS, rtol=MESH_RTOL, atol=MESH_ATOL):
+    """The parity contract, in one place.
+
+    Asserts identical predictions, identical per-item history for
+    ``history_keys`` (chosen levels by default; add "expert_called",
+    ...), equal expert-call totals, and — per ``state`` — "bitwise"
+    state equality over ``attrs``, "allclose" (mesh tolerance), or
+    ``None`` to skip the state check (delay-semantics comparisons where
+    trajectories legitimately differ).  ``costs=True`` additionally
+    pins per-item cost_units (the fallback-costing contract).
+    """
+    np.testing.assert_array_equal(m_ref["predictions"],
+                                  m_new["predictions"])
+    for key in history_keys:
+        np.testing.assert_array_equal(flat_history(ref, key),
+                                      flat_history(new, key))
+    if costs:
+        np.testing.assert_allclose(
+            flat_history(ref, "cost").astype(np.float64),
+            flat_history(new, "cost").astype(np.float64))
+    assert expert_calls_total(ref) == expert_calls_total(new)
+    if state == "bitwise":
+        assert_state_equal(ref.levels, new.levels, attrs)
+    elif state == "allclose":
+        assert_state_equal(ref.levels, new.levels, attrs,
+                           rtol=rtol, atol=atol)
+    elif state is not None:
+        raise ValueError(f"unknown state mode {state!r}")

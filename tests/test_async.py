@@ -1,38 +1,17 @@
 """Async expert queue (``BatchedCascadeEngine(max_delay=...)``) and the
 serving-semantics bugfix batch: parity at max_delay=0, bounded-delay
 update semantics, probe-route exactness under sampled actions, reorder
-annotation stability, fallback costing, and bounded history."""
-from dataclasses import replace
-
+annotation stability, fallback costing, and bounded history.  Parity
+assertions live in tests/harness.py."""
 import jax
 import numpy as np
 import pytest
 
-from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
-                        default_cascade_config)
+from harness import (assert_run_parity, batched_engine, make_setup,
+                     run_pair, sequential_engine)
+from repro.core import OnlineCascade, SimulatedExpert
 from repro.data import make_stream
 from repro.launch.serve import probe_route
-
-
-def _setup(mu, n, dataset="imdb", seed=0, hard_budget=None, **cfg_kw):
-    stream = make_stream(dataset, seed=seed, n_samples=n)
-    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
-                                 seed=seed)
-    if hard_budget is not None:
-        cfg = replace(cfg, hard_budget=hard_budget)
-    if cfg_kw:
-        cfg = replace(cfg, **cfg_kw)
-    return stream, cfg
-
-
-def _state_equal(a_levels, b_levels) -> bool:
-    for ls, lb in zip(a_levels, b_levels):
-        for attr in ("params", "opt_state", "dparams", "dopt_state"):
-            for x, y in zip(jax.tree.leaves(getattr(ls, attr)),
-                            jax.tree.leaves(getattr(lb, attr))):
-                if not bool(jax.numpy.array_equal(x, y)):
-                    return False
-    return True
 
 
 # ---------------------------------------------------------------------------
@@ -41,21 +20,13 @@ def _state_equal(a_levels, b_levels) -> bool:
 def test_delay0_bitwise_parity_s1():
     """The async-capable engine at max_delay=0 must stay bit-identical to
     the sequential reference (predictions, levels, expert calls, params,
-    opt state) — the acceptance contract for the route/commit split."""
-    stream, cfg = _setup(3e-6, 300)
-    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=1, max_delay=0)
-    m_seq = seq.run(stream)
-    m_bat = bat.run(stream)
-    np.testing.assert_array_equal(m_seq["predictions"], m_bat["predictions"])
-    np.testing.assert_array_equal(np.asarray(seq.history["level"]),
-                                  np.concatenate(bat.history["level"]))
-    # the fallback-cost fix must keep per-item costs identical too
-    np.testing.assert_allclose(np.asarray(seq.history["cost"], np.float64),
-                               np.concatenate(bat.history["cost"]))
-    assert m_seq["expert_calls"] == m_bat["expert_calls"]
-    assert _state_equal(seq.levels, bat.levels)
+    opt state, per-item costs) — the acceptance contract for the
+    route/commit split."""
+    stream, cfg = make_setup(3e-6, 300)
+    seq = sequential_engine(cfg, stream)
+    bat = batched_engine(cfg, stream, n_streams=1, max_delay=0)
+    m_seq, m_bat = run_pair(seq, bat, stream)
+    assert_run_parity(seq, m_seq, bat, m_bat, costs=True)
 
 
 # ---------------------------------------------------------------------------
@@ -67,17 +38,15 @@ def test_bounded_delay_update_timing():
     report -1), no update lands before the delay elapses, and the queue
     never holds more than D routed ticks."""
     S, D = 8, 2
-    stream, cfg = _setup(3e-7, 64, dataset="hatespeech")
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=S, max_delay=D)
-    init = [lvl._init_state for lvl in bat.levels]
+    stream, cfg = make_setup(3e-7, 64, dataset="hatespeech")
+    bat = batched_engine(cfg, stream, n_streams=S, max_delay=D)
+    init = [jax.tree.leaves(lvl._init_state[0]) for lvl in bat.levels]
 
     def params_at_init():
         return all(
-            bool(jax.numpy.array_equal(x, y))
-            for lvl, st in zip(bat.levels, init)
-            for x, y in zip(jax.tree.leaves(lvl.params),
-                            jax.tree.leaves(st[0])))
+            bool(np.array_equal(np.asarray(x), np.asarray(y)))
+            for lvl, leaves in zip(bat.levels, init)
+            for x, y in zip(jax.tree.leaves(lvl.params), leaves))
 
     # tick 1: beta0 == 1 -> every lane DAgger-jumps and is submitted
     out = bat.process_tick(range(S), stream.docs[:S])
@@ -107,9 +76,8 @@ def test_delay_bound_holds_without_further_expert_ticks():
     S, D = 8, 2
     # hard_budget == S: only tick 1 can call the expert; later ticks
     # route with the budget exhausted and never submit
-    stream, cfg = _setup(3e-7, 5 * S, hard_budget=S)
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=S, max_delay=D)
+    stream, cfg = make_setup(3e-7, 5 * S, hard_budget=S)
+    bat = batched_engine(cfg, stream, n_streams=S, max_delay=D)
     out1 = bat.process_tick(range(S), stream.docs[:S])
     assert out1["expert_called"].all()
     out2 = bat.process_tick(range(S, 2 * S), stream.docs[S:2 * S])
@@ -125,9 +93,8 @@ def test_bounded_delay_annotations_are_delay_invariant():
     gets: committed ring-buffer labels equal the simulated expert's
     table for the called items, same as the synchronous engine."""
     S = 8
-    stream, cfg = _setup(3e-7, S, dataset="imdb")
-    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
-    bat = BatchedCascadeEngine(cfg, expert, n_streams=S, max_delay=3)
+    stream, cfg = make_setup(3e-7, S, dataset="imdb")
+    bat = batched_engine(cfg, stream, n_streams=S, max_delay=3)
     out = bat.process_tick(range(S), stream.docs[:S])
     assert out["expert_called"].all()
     bat.flush()
@@ -144,12 +111,10 @@ def test_bounded_delay_accuracy_regression():
     """1k imdb, S=16: serving with a 2-tick annotation delay must stay
     within 5 accuracy points of the synchronous engine (the provisional
     answers on deferred lanes are the only source of divergence)."""
-    stream, cfg = _setup(3e-6, 1000)
-    sync = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                                n_streams=16, max_delay=0)
+    stream, cfg = make_setup(3e-6, 1000)
+    sync = batched_engine(cfg, stream, n_streams=16, max_delay=0)
     m_sync = sync.run(stream)
-    asyn = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                                n_streams=16, max_delay=2)
+    asyn = batched_engine(cfg, stream, n_streams=16, max_delay=2)
     m_async = asyn.run(stream)
     assert len(asyn._pending) == 0                   # run() flushed
     assert m_async["accuracy"] >= m_sync["accuracy"] - 0.05, (
@@ -158,10 +123,9 @@ def test_bounded_delay_accuracy_regression():
 
 
 def test_max_delay_validated():
-    stream, cfg = _setup(3e-7, 8)
+    stream, cfg = make_setup(3e-7, 8)
     with pytest.raises(ValueError):
-        BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=8, max_delay=-1)
+        batched_engine(cfg, stream, n_streams=8, max_delay=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +137,8 @@ def test_probe_route_exact(sample_actions):
     including the sampled-action draws when cfg.sample_actions is on
     (it previously thresholded at 0.5 and never drew u_act, degrading
     the micro-batched sequential engine to single-call fallbacks)."""
-    stream, cfg = _setup(3e-7, 120, dataset="hatespeech",
-                         sample_actions=sample_actions)
+    stream, cfg = make_setup(3e-7, 120, dataset="hatespeech",
+                             sample_actions=sample_actions)
     cascade = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
     mispredicts = 0
     for i, doc in enumerate(stream.docs):
@@ -211,9 +175,8 @@ def test_overflow_fallback_forward_is_costed():
     last student; that forward is real compute and must show up in
     cost_units (it used to be free)."""
     S, hb = 16, 4
-    stream, cfg = _setup(3e-7, S, hard_budget=hb)
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=S)
+    stream, cfg = make_setup(3e-7, S, hard_budget=hb)
+    bat = batched_engine(cfg, stream, n_streams=S)
     # tick 1: beta0 == 1 -> all S lanes jump; only hb win the budget
     out = bat.process_tick(range(S), stream.docs[:S])
     called = out["expert_called"]
@@ -231,13 +194,9 @@ def test_overflow_fallback_forward_is_costed():
 # ---------------------------------------------------------------------------
 def test_history_limit_bounds_memory():
     S, ticks = 4, 12
-    stream, cfg = _setup(3e-7, S * ticks)
-    capped = BatchedCascadeEngine(
-        cfg, SimulatedExpert(stream, "gpt-3.5-turbo"), n_streams=S,
-        history_limit=5)
-    off = BatchedCascadeEngine(
-        cfg, SimulatedExpert(stream, "gpt-3.5-turbo"), n_streams=S,
-        history_limit=0)
+    stream, cfg = make_setup(3e-7, S * ticks)
+    capped = batched_engine(cfg, stream, n_streams=S, history_limit=5)
+    off = batched_engine(cfg, stream, n_streams=S, history_limit=0)
     assert off.history is None
     for tk in range(ticks):
         idxs = list(range(tk * S, (tk + 1) * S))
@@ -248,8 +207,7 @@ def test_history_limit_bounds_memory():
     assert int(capped.items_seen.sum()) == S * ticks   # aggregates intact
     assert int(off.items_seen.sum()) == S * ticks
 
-    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                        history_limit=3)
+    seq = sequential_engine(cfg, stream, history_limit=3)
     for i in range(8):
         seq.process(i, stream.docs[i])
     assert len(seq.history["pred"]) == 3

@@ -1,36 +1,21 @@
 """BatchedCascadeEngine: parity with the sequential reference and
-multi-stream accounting (see core/batched.py for the contract)."""
-from dataclasses import replace
-
-import jax
+multi-stream accounting (see core/batched.py for the contract; the
+parity assertions live in tests/harness.py)."""
 import numpy as np
 import pytest
 
-from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
+from harness import (assert_run_parity, batched_engine, make_setup,
+                     run_pair, sequential_engine)
+from repro.core import (BatchedCascadeEngine, SimulatedExpert,
                         default_cascade_config)
-from repro.data import make_stream
 
 
 def _engines(mu, n, dataset="imdb", seed=0, hard_budget=None, n_streams=1):
-    stream = make_stream(dataset, seed=seed, n_samples=n)
-    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
-                                 seed=seed)
-    if hard_budget is not None:
-        cfg = replace(cfg, hard_budget=hard_budget)
-    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=n_streams)
+    cfg_kw = {} if hard_budget is None else {"hard_budget": hard_budget}
+    stream, cfg = make_setup(mu, n, dataset=dataset, seed=seed, **cfg_kw)
+    seq = sequential_engine(cfg, stream)
+    bat = batched_engine(cfg, stream, n_streams=n_streams)
     return stream, seq, bat
-
-
-def _state_equal(seq, bat) -> bool:
-    for ls, lb in zip(seq.levels, bat.levels):
-        for attr in ("params", "opt_state", "dparams", "dopt_state"):
-            for a, b in zip(jax.tree.leaves(getattr(ls, attr)),
-                            jax.tree.leaves(getattr(lb, attr))):
-                if not bool(jax.numpy.array_equal(a, b)):
-                    return False
-    return True
 
 
 # ---------------------------------------------------------------------------
@@ -44,24 +29,15 @@ def test_batch1_bitwise_parity(dataset, mu, n):
     """S == 1 must reproduce OnlineCascade bit-for-bit: identical
     predictions, chosen levels, expert calls, and parameter state."""
     stream, seq, bat = _engines(mu, n, dataset=dataset)
-    m_seq = seq.run(stream)
-    m_bat = bat.run(stream)
-    np.testing.assert_array_equal(m_seq["predictions"],
-                                  m_bat["predictions"])
-    np.testing.assert_array_equal(np.asarray(seq.history["level"]),
-                                  np.concatenate(bat.history["level"]))
-    assert m_seq["expert_calls"] == m_bat["expert_calls"]
-    assert _state_equal(seq, bat)
+    m_seq, m_bat = run_pair(seq, bat, stream)
+    assert_run_parity(seq, m_seq, bat, m_bat)
 
 
 def test_batch1_parity_with_hard_budget():
     stream, seq, bat = _engines(3e-7, 300, hard_budget=40)
-    m_seq = seq.run(stream)
-    m_bat = bat.run(stream)
-    np.testing.assert_array_equal(m_seq["predictions"],
-                                  m_bat["predictions"])
-    assert m_seq["expert_calls"] == m_bat["expert_calls"] <= 40
-    assert _state_equal(seq, bat)
+    m_seq, m_bat = run_pair(seq, bat, stream)
+    assert_run_parity(seq, m_seq, bat, m_bat)
+    assert m_seq["expert_calls"] <= 40
 
 
 # ---------------------------------------------------------------------------
@@ -134,12 +110,11 @@ def test_scaled_updates_close_expert_call_gap():
     Optimizer.step_k) must pin the count to within 1.5x of the
     reference."""
     n, mu = 2048, 1e-6
-    stream = make_stream("imdb", seed=0, n_samples=n)
-    cfg = default_cascade_config(n_classes=2, mu=mu, seed=0)
-    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
+    stream, cfg = make_setup(mu, n)
+    seq = sequential_engine(cfg, stream)
     m_seq = seq.run(stream)
-    bat = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                               n_streams=64, updates_per_tick="scaled")
+    bat = batched_engine(cfg, stream, n_streams=64,
+                         updates_per_tick="scaled")
     m_bat = bat.run(stream)
     ratio = m_bat["expert_calls"] / max(m_seq["expert_calls"], 1)
     assert ratio <= 1.5, (

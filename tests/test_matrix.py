@@ -1,0 +1,113 @@
+"""Composition matrix: one parametrized smoke over the full
+(mesh x max_delay x pipeline_depth x updates_per_tick x expert_workers)
+grid, asserting the parity contract on every supported combination.
+
+Each cell runs a small stream on a cheap two-level (LR + small MLP)
+cascade and must match the plain engine (no mesh, no pipeline, one
+worker) that shares its SEMANTIC axes — max_delay, updates_per_tick,
+and commit granularity (``per_lane`` rides the workers axis: the pool
+cells commit per lane, which is a different, documented update
+trajectory, so their reference does too).  mesh/pipeline/workers are
+pure execution axes and must change nothing; mesh cells compare params
+at the documented SPMD float tolerance and are marked ``multidevice``
+(they run under the 8-virtual-device CI job and skip elsewhere).
+"""
+import jax
+import pytest
+
+from harness import (MESH_ATOL, MESH_RTOL, assert_run_parity,
+                     batched_engine)
+from repro.core import CascadeConfig, LevelSpec
+from repro.data import make_stream
+from repro.models.students import MLPSpec
+
+N, S = 96, 8
+MESHES = ("none", "data8")
+DELAYS = (0, 2)
+DEPTHS = (0, 2)
+UPDATES = ("single", "scaled")
+WORKERS = (1, 2)
+
+_CACHE = {}
+
+
+def _stream_cfg():
+    if "setup" not in _CACHE:
+        stream = make_stream("hatespeech", seed=0, n_samples=N)
+        levels = (
+            LevelSpec(kind="lr", cost=1.0, cache_size=8, batch_size=8,
+                      student_lr=0.5, beta_decay=0.9,
+                      calibration_factor=0.4),
+            LevelSpec(kind="mlp", cost=50.0, cache_size=16, batch_size=8,
+                      student_lr=1e-3, beta_decay=0.9,
+                      calibration_factor=0.3),
+        )
+        cfg = CascadeConfig(
+            levels=levels, n_classes=stream.spec.n_classes,
+            expert_cost=1.0e6, mu=3e-6, n_features=512,
+            mlp_spec=MLPSpec(n_features=512, hidden=64, n_layers=2),
+            seed=0)
+        _CACHE["setup"] = (stream, cfg)
+    return _CACHE["setup"]
+
+
+def _reference(max_delay, updates, per_lane):
+    """The plain engine sharing the cell's semantic axes (cached: one
+    build + run per (max_delay, updates, per_lane) key)."""
+    key = ("ref", max_delay, updates, per_lane)
+    if key not in _CACHE:
+        stream, cfg = _stream_cfg()
+        eng = batched_engine(cfg, stream, n_streams=S,
+                             max_delay=max_delay, updates_per_tick=updates,
+                             per_lane=per_lane)
+        _CACHE[key] = (eng, eng.run(stream))
+    return _CACHE[key]
+
+
+def _cells():
+    cells = []
+    for mesh in MESHES:
+        for d in DELAYS:
+            for p in DEPTHS:
+                for u in UPDATES:
+                    for w in WORKERS:
+                        marks = ([pytest.mark.multidevice]
+                                 if mesh == "data8" else [])
+                        cells.append(pytest.param(
+                            mesh, d, p, u, w, marks=marks,
+                            id=f"{mesh}-D{d}-P{p}-{u}-W{w}"))
+    return cells
+
+
+@pytest.mark.parametrize("mesh_kind,max_delay,depth,updates,workers",
+                         _cells())
+def test_composition_cell(mesh_kind, max_delay, depth, updates, workers):
+    """Every supported knob combination preserves the parity contract
+    against its semantic reference."""
+    if mesh_kind == "data8" and len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI job: "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    per_lane = workers > 1
+    ref, m_ref = _reference(max_delay, updates, per_lane)
+    if mesh_kind == "none" and depth == 0 and workers == 1:
+        # this cell IS its reference configuration
+        return
+    stream, cfg = _stream_cfg()
+    mesh = None
+    if mesh_kind == "data8":
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8, 1), ("data", "model"))
+    eng = batched_engine(
+        cfg, stream, n_streams=S, mesh=mesh, max_delay=max_delay,
+        pipeline_depth=depth, updates_per_tick=updates,
+        per_lane=per_lane, expert_kw={"workers": workers})
+    m = eng.run(stream)
+    if mesh is None:
+        assert_run_parity(ref, m_ref, eng, m,
+                          history_keys=("level", "expert_called"))
+    else:
+        assert_run_parity(ref, m_ref, eng, m, state="allclose",
+                          attrs=("params", "dparams"),
+                          history_keys=("level", "expert_called"),
+                          rtol=MESH_RTOL, atol=MESH_ATOL)
+    assert len(eng._pending) == 0 and len(eng._ring) == 0

@@ -2,54 +2,25 @@
 depth-0 bitwise parity with the sequential reference, exact P>0 routing
 parity (predictions/levels/expert calls/params), update-tick fencing,
 hard-budget fencing, composition with the async expert queue, and the
-submit/resolve driver API.  The 8-virtual-device mesh variant lives in a
-subprocess snippet (same pattern as tests/test_sharded.py)."""
+submit/resolve driver API.  Parity assertions live in tests/harness.py;
+the 8-virtual-device mesh variant runs a subprocess snippet (same
+pattern as tests/test_sharded.py) that imports the same harness."""
 import os
 import subprocess
 import sys
-from dataclasses import replace
 
-import jax
 import numpy as np
 import pytest
 
-from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
-                        default_cascade_config)
-from repro.data import make_stream
+from harness import (assert_run_parity, batched_engine, make_setup,
+                     run_pair, sequential_engine)
 
-
-def _setup(mu, n, dataset="imdb", seed=0, **cfg_kw):
-    stream = make_stream(dataset, seed=seed, n_samples=n)
-    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
-                                 seed=seed)
-    if cfg_kw:
-        cfg = replace(cfg, **cfg_kw)
-    return stream, cfg
+PIPE_PARITY_KEYS = ("level", "expert_called")
 
 
 def _engine(cfg, stream, S, P, D=0):
-    return BatchedCascadeEngine(
-        cfg, SimulatedExpert(stream, "gpt-3.5-turbo"), n_streams=S,
-        pipeline_depth=P, max_delay=D)
-
-
-def _state(e):
-    return [np.asarray(x) for lvl in e.levels
-            for attr in ("params", "opt_state", "dparams", "dopt_state")
-            for x in jax.tree.leaves(getattr(lvl, attr))]
-
-
-def _assert_identical(e_ref, m_ref, e_new, m_new, *, bitwise_state=True):
-    np.testing.assert_array_equal(m_ref["predictions"], m_new["predictions"])
-    for a, b in zip(e_ref.history["level"], e_new.history["level"]):
-        np.testing.assert_array_equal(a, b)
-    for a, b in zip(e_ref.history["expert_called"],
-                    e_new.history["expert_called"]):
-        np.testing.assert_array_equal(a, b)
-    assert m_ref["expert_calls"] == m_new["expert_calls"]
-    if bitwise_state:
-        for a, b in zip(_state(e_ref), _state(e_new)):
-            np.testing.assert_array_equal(a, b)
+    return batched_engine(cfg, stream, n_streams=S, pipeline_depth=P,
+                          max_delay=D)
 
 
 # ---------------------------------------------------------------------------
@@ -60,22 +31,11 @@ def test_depth0_bitwise_parity_s1():
     reference at S=1 — predictions, levels, per-item costs, expert
     calls, params AND optimizer state (the acceptance contract for the
     dispatch/resolve split of the route pass)."""
-    stream, cfg = _setup(3e-6, 300)
-    seq = OnlineCascade(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"))
+    stream, cfg = make_setup(3e-6, 300)
+    seq = sequential_engine(cfg, stream)
     bat = _engine(cfg, stream, S=1, P=0)
-    m_seq = seq.run(stream)
-    m_bat = bat.run(stream)
-    np.testing.assert_array_equal(m_seq["predictions"], m_bat["predictions"])
-    np.testing.assert_array_equal(np.asarray(seq.history["level"]),
-                                  np.concatenate(bat.history["level"]))
-    np.testing.assert_allclose(np.asarray(seq.history["cost"], np.float64),
-                               np.concatenate(bat.history["cost"]))
-    assert m_seq["expert_calls"] == m_bat["expert_calls"]
-    for ls, lb in zip(seq.levels, bat.levels):
-        for attr in ("params", "opt_state", "dparams", "dopt_state"):
-            for a, b in zip(jax.tree.leaves(getattr(ls, attr)),
-                            jax.tree.leaves(getattr(lb, attr))):
-                assert bool(jax.numpy.array_equal(a, b)), attr
+    m_seq, m_bat = run_pair(seq, bat, stream)
+    assert_run_parity(seq, m_seq, bat, m_bat, costs=True)
 
 
 # ---------------------------------------------------------------------------
@@ -88,12 +48,12 @@ def test_pipelined_parity_learning_regime(depth):
     regime, where in-flight speculation goes stale on every committing
     tick — the refetch path must restore exactness, not approximate
     it."""
-    stream, cfg = _setup(3e-6, 256)
+    stream, cfg = make_setup(3e-6, 256)
     e0 = _engine(cfg, stream, S=8, P=0)
     m0 = e0.run(stream)
     eP = _engine(cfg, stream, S=8, P=depth)
     mP = eP.run(stream)
-    _assert_identical(e0, m0, eP, mP)
+    assert_run_parity(e0, m0, eP, mP, history_keys=PIPE_PARITY_KEYS)
     # the learning regime actually exercised the staleness machinery
     assert eP.pipeline_stats["refetches"] > 0
     assert eP.pipeline_stats["submitted"] == eP.pipeline_stats["resolved"]
@@ -104,12 +64,12 @@ def test_update_tick_fencing_with_async_delay():
     so the pipeline fences PROACTIVELY (update_fences) instead of
     wasting speculated forwards (refetches == 0) — and the results stay
     identical to the unpipelined async engine."""
-    stream, cfg = _setup(3e-6, 256)
+    stream, cfg = make_setup(3e-6, 256)
     e0 = _engine(cfg, stream, S=8, P=0, D=2)
     m0 = e0.run(stream)
     eP = _engine(cfg, stream, S=8, P=2, D=2)
     mP = eP.run(stream)
-    _assert_identical(e0, m0, eP, mP)
+    assert_run_parity(e0, m0, eP, mP, history_keys=PIPE_PARITY_KEYS)
     assert eP.pipeline_stats["update_fences"] > 0
     assert eP.pipeline_stats["refetches"] == 0
 
@@ -118,12 +78,12 @@ def test_hard_budget_fences_speculation():
     """Near a hard budget the jump gate's budget bit cannot be proven
     stable; the engine must drain the ring inside that window and still
     match the unpipelined engine's calls exactly."""
-    stream, cfg = _setup(3e-6, 256, hard_budget=25)
+    stream, cfg = make_setup(3e-6, 256, hard_budget=25)
     e0 = _engine(cfg, stream, S=8, P=0)
     m0 = e0.run(stream)
     eP = _engine(cfg, stream, S=8, P=2)
     mP = eP.run(stream)
-    _assert_identical(e0, m0, eP, mP)
+    assert_run_parity(e0, m0, eP, mP, history_keys=PIPE_PARITY_KEYS)
     assert m0["expert_calls"] <= 25
     assert eP.pipeline_stats["budget_fences"] > 0
 
@@ -132,7 +92,7 @@ def test_converged_regime_speculates_freely():
     """The single-exit converged regime (no expert traffic, no updates)
     is where the pipeline pays: every tick must speculate successfully —
     zero refetches, zero fences — with identical predictions."""
-    stream, cfg = _setup(3e-6, 256, hard_budget=0)
+    stream, cfg = make_setup(3e-6, 256, hard_budget=0)
     e0 = _engine(cfg, stream, S=8, P=0)
     m0 = e0.run(stream)
     eP = _engine(cfg, stream, S=8, P=2)
@@ -152,7 +112,7 @@ def test_submit_resolve_api_fifo_and_latency_bound():
     first, and every output maps back to its submission via
     "indices"."""
     S, P, ticks = 4, 2, 6
-    stream, cfg = _setup(3e-7, S * ticks, hard_budget=0)
+    stream, cfg = make_setup(3e-7, S * ticks, hard_budget=0)
     eng = _engine(cfg, stream, S=S, P=P)
     seen = []
     for tk in range(ticks):
@@ -171,7 +131,7 @@ def test_submit_resolve_api_fifo_and_latency_bound():
 
 def test_process_tick_rejects_inflight_mixing():
     S = 4
-    stream, cfg = _setup(3e-7, 2 * S, hard_budget=0)
+    stream, cfg = make_setup(3e-7, 2 * S, hard_budget=0)
     eng = _engine(cfg, stream, S=S, P=2)
     eng.submit_tick(list(range(S)), stream.docs[:S])
     with pytest.raises(RuntimeError):
@@ -187,7 +147,7 @@ def test_flush_rejects_inflight_ticks():
     params the unpipelined engine never saw at those ticks) — it must
     refuse until the ring is drained."""
     S = 4
-    stream, cfg = _setup(3e-6, 2 * S)
+    stream, cfg = make_setup(3e-6, 2 * S)
     eng = _engine(cfg, stream, S=S, P=2, D=2)
     eng.submit_tick(list(range(S)), stream.docs[:S])
     with pytest.raises(RuntimeError):
@@ -200,7 +160,7 @@ def test_flush_rejects_inflight_ticks():
 def test_reset_clears_pipeline_and_reproduces():
     """reset() discards in-flight dispatches and restores the exact
     initial trajectory (warm-engine reuse across streams)."""
-    stream, cfg = _setup(3e-6, 128)
+    stream, cfg = make_setup(3e-6, 128)
     eng = _engine(cfg, stream, S=8, P=2)
     m1 = eng.run(stream)
     # leave a tick in flight, then reset mid-stream
@@ -215,10 +175,9 @@ def test_reset_clears_pipeline_and_reproduces():
 
 
 def test_pipeline_depth_validated():
-    stream, cfg = _setup(3e-7, 8)
+    stream, cfg = make_setup(3e-7, 8)
     with pytest.raises(ValueError):
-        BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=8, pipeline_depth=-1)
+        batched_engine(cfg, stream, n_streams=8, pipeline_depth=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -229,39 +188,27 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, {src!r})
+sys.path.insert(0, {tests!r})
 import numpy as np, jax
 assert len(jax.devices()) == 8
-from repro.core import (BatchedCascadeEngine, SimulatedExpert,
-                        default_cascade_config)
-from repro.data import make_stream
+from harness import assert_run_parity, batched_engine, make_setup
 from repro.launch.mesh import make_mesh
 
 n, S = 256, 32
-stream = make_stream("imdb", seed=0, n_samples=n)
-cfg = default_cascade_config(n_classes=2, mu=3e-6, seed=0)
+stream, cfg = make_setup(3e-6, n, dataset="imdb", seed=0)
 mesh = make_mesh((8, 1), ("data", "model"))
 
-base = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                            n_streams=S)
+base = batched_engine(cfg, stream, n_streams=S)
 m0 = base.run(stream)
-pipe = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                            n_streams=S, mesh=mesh, pipeline_depth=2)
+pipe = batched_engine(cfg, stream, n_streams=S, mesh=mesh,
+                      pipeline_depth=2)
 m1 = pipe.run(stream)
 
-# same tick keys => identical routing under pipelining on the mesh too
-np.testing.assert_array_equal(m0["predictions"], m1["predictions"])
-for a, b in zip(base.history["level"], pipe.history["level"]):
-    np.testing.assert_array_equal(a, b)
-assert m0["expert_calls"] == m1["expert_calls"]
-assert len(pipe._ring) == 0 and len(pipe._pending) == 0
-
+# same tick keys => identical routing under pipelining on the mesh too;
 # params agree to float tolerance (SPMD may reassociate reductions)
-for ls, lb in zip(base.levels, pipe.levels):
-    for attr in ("params", "dparams"):
-        for a, b in zip(jax.tree.leaves(getattr(ls, attr)),
-                        jax.tree.leaves(getattr(lb, attr))):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-6)
+assert_run_parity(base, m0, pipe, m1, state="allclose",
+                  attrs=("params", "dparams"))
+assert len(pipe._ring) == 0 and len(pipe._pending) == 0
 
 # warm reuse: the pipelined mesh engine reproduces itself after reset()
 pipe.reset()
@@ -271,18 +218,13 @@ np.testing.assert_array_equal(m1["predictions"], m2["predictions"])
 # composition: mesh + pipeline + bounded annotation delay must match the
 # unsharded unpipelined engine AT THE SAME DELAY (provisional answers on
 # deferred lanes are delay semantics, not pipeline semantics)
-baseD = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=S, max_delay=2)
+baseD = batched_engine(cfg, stream, n_streams=S, max_delay=2)
 mD0 = baseD.run(stream)
-pipeD = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=S, mesh=mesh, pipeline_depth=2,
-                             max_delay=2)
+pipeD = batched_engine(cfg, stream, n_streams=S, mesh=mesh,
+                       pipeline_depth=2, max_delay=2)
 mD1 = pipeD.run(stream)
-np.testing.assert_array_equal(mD0["predictions"], mD1["predictions"])
-for a, b in zip(baseD.history["expert_called"],
-                pipeD.history["expert_called"]):
-    np.testing.assert_array_equal(a, b)
-assert mD0["expert_calls"] == mD1["expert_calls"]
+assert_run_parity(baseD, mD0, pipeD, mD1, state=None,
+                  history_keys=("level", "expert_called"))
 print("PIPELINED-MESH-OK")
 """
 
@@ -291,9 +233,10 @@ def test_pipelined_mesh_parity_8dev():
     """S=32 lanes over an 8-virtual-device mesh with pipeline_depth=2 +
     max_delay=2: identical predictions/levels/expert calls as the
     unsharded unpipelined engine on the same tick keys."""
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    code = PIPELINED_MESH_SNIPPET.format(src=src)
+    here = os.path.dirname(__file__)
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    code = PIPELINED_MESH_SNIPPET.format(src=src,
+                                         tests=os.path.abspath(here))
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", code],

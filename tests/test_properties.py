@@ -1,0 +1,204 @@
+"""Property tests (hypothesis) for the serving invariants, with concrete
+smoke variants that run even when hypothesis is absent:
+
+* beta re-exploration floor: monotone non-increasing schedule, never
+  below the floor, O(sqrt T) extra exploration (the no-regret bound);
+* pre-split tick RNG: no draw collisions across (tick, level, draw)
+  purposes — the discipline every parity contract rests on;
+* queue-drain invariants: under randomized worker latencies, every
+  annotation commits exactly once, within the D-tick bound, in
+  deterministic (submit-tick, lane) order, and the engine trajectory is
+  bitwise latency-invariant.
+
+Each property's body lives in a ``_check_*`` helper so the concrete
+smoke tests exercise the same logic with pinned inputs (the property
+tests skip gracefully via tests/_hypothesis_stubs.py when hypothesis is
+not installed)."""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade gracefully: only property tests skip
+    from _hypothesis_stubs import given, settings, st
+
+from harness import batched_engine, state_leaves
+from repro.core import CascadeConfig, LevelSpec
+from repro.core.batched import lanes_due
+from repro.core.deferral import reexploration_floor
+from repro.core.rng import tick_rngs
+from repro.data import make_stream
+
+
+# ---------------------------------------------------------------------------
+# beta re-exploration floor
+# ---------------------------------------------------------------------------
+def _check_beta_floor(beta0, decay, floor0, T):
+    """The engine's beta recurrence: monotone non-increasing, floored at
+    floor0/sqrt(t), and the floor's cumulative exploration cost is
+    O(sqrt T) (<= 2 * floor0 * sqrt(T)) — Theorem 3.2's no-regret bound
+    survives the re-exploration trickle."""
+    beta = beta0
+    betas = []
+    for t in range(1, T + 1):
+        floor = reexploration_floor(floor0, t)
+        assert floor == floor0 / np.sqrt(max(t, 1))
+        new = max(beta * decay, floor)
+        assert new <= beta + 1e-15          # monotone non-increasing
+        assert new >= floor                 # never below the floor
+        assert new <= beta0                 # never above the start
+        beta = new
+        betas.append(beta)
+    # no-regret: the floor adds at most sum floor0/sqrt(t) <= 2F sqrt(T)
+    floor_mass = sum(reexploration_floor(floor0, t)
+                     for t in range(1, T + 1))
+    assert floor_mass <= 2.0 * floor0 * np.sqrt(T) + 1e-12
+    # vanishing average exploration => no-regret preserved
+    if T >= 4:
+        assert floor_mass / T <= 2.0 * floor0 / np.sqrt(T) + 1e-12
+    # floor0 = 0 disables the trickle exactly
+    if floor0 == 0:
+        np.testing.assert_allclose(
+            betas, [beta0 * decay ** t for t in range(1, T + 1)])
+
+
+@given(beta0=st.floats(0.1, 1.0), decay=st.floats(0.5, 0.999),
+       floor0=st.floats(0.0, 0.2), T=st.integers(1, 400))
+@settings(max_examples=50, deadline=None)
+def test_beta_floor_monotone_no_regret(beta0, decay, floor0, T):
+    _check_beta_floor(beta0, decay, floor0, T)
+
+
+def test_beta_floor_concrete():
+    """Pinned cases of the property (run even without hypothesis)."""
+    _check_beta_floor(1.0, 0.97, 0.05, 300)
+    _check_beta_floor(1.0, 0.95, 0.0, 100)
+    _check_beta_floor(0.5, 0.999, 0.2, 50)
+
+
+# ---------------------------------------------------------------------------
+# pre-split tick RNG non-collision
+# ---------------------------------------------------------------------------
+def _check_rng_no_collision(seed, n_streams, n_ticks, n_levels):
+    """Across every (lane, tick, level, purpose) the pre-split
+    generators yield distinct draw sequences: no jump/action/cache
+    stream ever collides with another (float64 uniforms — collision of
+    honest independent streams has probability ~0, so equality means a
+    key-derivation bug)."""
+    seen = {}
+    for s in range(n_streams):
+        for t in range(1, n_ticks + 1):
+            r = tick_rngs(seed, s, t, n_levels)
+            draws = {"jump": tuple(r.jump.random(n_levels)),
+                     "action": tuple(r.action.random(n_levels))}
+            for lev in range(n_levels):
+                draws[f"cache{lev}"] = tuple(r.cache[lev].random(3))
+            for purpose, v in draws.items():
+                assert v not in seen, (
+                    f"draw collision: ({s},{t},{purpose}) vs "
+                    f"{seen[v]}")
+                seen[v] = (s, t, purpose)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n_streams=st.integers(1, 4),
+       n_ticks=st.integers(1, 8), n_levels=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_tick_rng_no_collision(seed, n_streams, n_ticks, n_levels):
+    _check_rng_no_collision(seed, n_streams, n_ticks, n_levels)
+
+
+def test_tick_rng_no_collision_concrete():
+    _check_rng_no_collision(0, 4, 16, 2)
+    _check_rng_no_collision(12345, 2, 8, 3)
+
+
+# ---------------------------------------------------------------------------
+# commit schedule (pure function)
+# ---------------------------------------------------------------------------
+def _check_lanes_due(k, D, per_lane):
+    """lanes_due is a monotone cumulative schedule: 0 at age 0 (D >= 1),
+    everything at age >= D, never decreasing, never out of [0, k]."""
+    prev = 0
+    for age in range(0, D + 3):
+        cur = lanes_due(k, age, D, per_lane)
+        assert 0 <= cur <= k
+        assert cur >= prev
+        prev = cur
+    if D >= 1:
+        assert lanes_due(k, 0, D, per_lane) == 0
+    assert lanes_due(k, D, D, per_lane) == k
+    if not per_lane:
+        for age in range(0, D):
+            assert lanes_due(k, age, D, False) == 0
+
+
+@given(k=st.integers(0, 64), D=st.integers(0, 6), per_lane=st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_lanes_due_properties(k, D, per_lane):
+    _check_lanes_due(k, D, per_lane)
+
+
+def test_lanes_due_concrete():
+    for k in (0, 1, 5, 8, 33):
+        for D in (0, 1, 2, 4):
+            _check_lanes_due(k, D, True)
+            _check_lanes_due(k, D, False)
+
+
+# ---------------------------------------------------------------------------
+# queue-drain invariants under randomized worker latencies
+# ---------------------------------------------------------------------------
+_DRAIN_CACHE = {}
+
+
+def _drain_reference(D):
+    """Zero-latency single-worker reference run (cached per delay)."""
+    if D not in _DRAIN_CACHE:
+        stream = make_stream("imdb", seed=0, n_samples=64)
+        levels = (LevelSpec(kind="lr", cost=1.0, cache_size=8,
+                            batch_size=8, student_lr=0.5, beta_decay=0.9,
+                            calibration_factor=0.4),)
+        cfg = CascadeConfig(levels=levels, n_classes=2, expert_cost=1.0e6,
+                            mu=3e-7, n_features=256, seed=0)
+        eng = batched_engine(cfg, stream, n_streams=4, max_delay=D,
+                             per_lane=True)
+        m = eng.run(stream)
+        _DRAIN_CACHE[D] = (stream, cfg, eng, m)
+    return _DRAIN_CACHE[D]
+
+
+def _check_queue_drain(D, workers, lat_a, lat_b):
+    """Run the per-lane engine under a pseudo-random worker-latency
+    schedule and assert: every annotation commits exactly once within D
+    ticks in sorted (tick, lane) order, and predictions/params/commit
+    schedule are bitwise identical to the zero-latency reference."""
+    stream, cfg, ref, m_ref = _drain_reference(D)
+    eng = batched_engine(
+        cfg, stream, n_streams=4, max_delay=D, per_lane=True,
+        expert_kw={"workers": workers,
+                   "latency": lambda seq, j: (seq * lat_a + j * lat_b) % 7})
+    m = eng.run(stream)
+    log = eng.commit_log
+    called = np.concatenate(list(eng.history["expert_called"]))
+    assert len(log) == int(called.sum())             # exactly once
+    keys = [(t, s) for t, s, _c in log]
+    assert len(set(keys)) == len(keys)
+    assert keys == sorted(keys)                      # deterministic order
+    assert all(0 <= c - t <= D for t, _s, c in log)  # the <= D bound
+    # latency moves wall-clock only: trajectory is bitwise identical
+    np.testing.assert_array_equal(m_ref["predictions"], m["predictions"])
+    assert log == ref.commit_log
+    for a, b in zip(state_leaves(ref.levels), state_leaves(eng.levels)):
+        np.testing.assert_array_equal(a, b)
+
+
+@given(D=st.integers(0, 3), workers=st.integers(1, 4),
+       lat_a=st.integers(0, 997), lat_b=st.integers(0, 97))
+@settings(max_examples=10, deadline=None)
+def test_queue_drain_invariants(D, workers, lat_a, lat_b):
+    _check_queue_drain(D, workers, lat_a, lat_b)
+
+
+def test_queue_drain_invariants_concrete():
+    _check_queue_drain(2, 2, 13, 5)
+    _check_queue_drain(0, 3, 2, 1)
+    _check_queue_drain(1, 4, 101, 0)

@@ -1,7 +1,8 @@
 """Lane-sharded BatchedCascadeEngine: parity with the unsharded engine
 on identical tick keys, and reuse of a compiled sharded engine across
-streams.  The 8-virtual-device run executes in a subprocess so the XLA
-device-count flag never leaks into this test process (same pattern as
+streams.  Parity assertions live in tests/harness.py; the
+8-virtual-device run executes in a subprocess so the XLA device-count
+flag never leaks into this test process (same pattern as
 test_sharding.py)."""
 import os
 import subprocess
@@ -45,51 +46,36 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, {src!r})
+sys.path.insert(0, {tests!r})
 import numpy as np, jax
-import jax.numpy as jnp
 assert len(jax.devices()) == 8
-from repro.core import (BatchedCascadeEngine, SimulatedExpert,
-                        default_cascade_config)
-from repro.data import make_stream
+from harness import assert_run_parity, batched_engine, make_setup
 from repro.launch.mesh import make_mesh
 
 n, S = 384, 64
-stream = make_stream("imdb", seed=0, n_samples=n)
-cfg = default_cascade_config(n_classes=2, mu=3e-6, seed=0)
+stream, cfg = make_setup(3e-6, n, dataset="imdb", seed=0)
 mesh = make_mesh((8, 1), ("data", "model"))
 
 # n_streams must divide over the lane axis
 try:
-    BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                         n_streams=12, mesh=mesh)
+    batched_engine(cfg, stream, n_streams=12, mesh=mesh)
     raise SystemExit("expected ValueError for n_streams=12 on data=8")
 except ValueError:
     pass
 
-base = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                            n_streams=S)
+base = batched_engine(cfg, stream, n_streams=S)
 m0 = base.run(stream)
 # max_delay=0 explicitly: the async-capable route/commit engine must be
 # bit-identical to the synchronous reference on the mesh too
-shard = BatchedCascadeEngine(cfg, SimulatedExpert(stream, "gpt-3.5-turbo"),
-                             n_streams=S, mesh=mesh, max_delay=0)
+shard = batched_engine(cfg, stream, n_streams=S, mesh=mesh, max_delay=0)
 m1 = shard.run(stream)
 
-# same tick keys => identical routing decisions and expert usage
-np.testing.assert_array_equal(m0["predictions"], m1["predictions"])
-for a, b in zip(base.history["level"], shard.history["level"]):
-    np.testing.assert_array_equal(a, b)
-assert m0["expert_calls"] == m1["expert_calls"]
-np.testing.assert_array_equal(base.expert_calls, shard.expert_calls)
-
-# final parameters agree to float tolerance (SPMD partitioning may
+# same tick keys => identical routing decisions and expert usage; final
+# parameters agree to float tolerance (SPMD partitioning may
 # reassociate the weighted-update reductions at the ulp level)
-for ls, lb in zip(base.levels, shard.levels):
-    for attr in ("params", "dparams"):
-        for a, b in zip(jax.tree.leaves(getattr(ls, attr)),
-                        jax.tree.leaves(getattr(lb, attr))):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-6)
+assert_run_parity(base, m0, shard, m1, state="allclose",
+                  attrs=("params", "dparams"))
+np.testing.assert_array_equal(base.expert_calls, shard.expert_calls)
 
 # a compiled sharded engine serves a fresh stream after reset() with the
 # exact same trajectory (the serving reuse path: warm once, serve many)
@@ -100,7 +86,7 @@ assert m1["expert_calls"] == m2["expert_calls"]
 
 # partial final tick (n not a multiple of S) exercises the replicated
 # fallback placement for non-divisible lane batches
-stream2 = make_stream("imdb", seed=1, n_samples=100)
+stream2, _ = make_setup(3e-6, 100, dataset="imdb", seed=1)
 shard.reset()
 m3 = shard.run(stream2)
 assert len(m3["predictions"]) == 100
@@ -123,9 +109,9 @@ def test_sharded_engine_parity_8dev():
     """S=64 lanes over an 8-virtual-device (data, model) mesh: identical
     predictions, chosen levels, and expert-call counts as the unsharded
     engine; final params allclose; reset() reuse across streams."""
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    code = SHARDED_SNIPPET.format(src=src)
+    here = os.path.dirname(__file__)
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    code = SHARDED_SNIPPET.format(src=src, tests=os.path.abspath(here))
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", code],
