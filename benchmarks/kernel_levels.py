@@ -1,0 +1,174 @@
+"""Kernel-backed cascade levels: path timing, cost/accuracy, roofline.
+
+Three sections, each honest about what the 1-core CPU container can and
+cannot measure:
+
+* ``paths`` — batched forward latency of each kernel-backed level down
+  its two paths: the Pallas kernel path (what the route pass serves) and
+  the jnp reference path (what the weighted loss differentiates).  On
+  CPU the kernels run in **interpret mode**, which is an emulation and
+  *slower* than the fused jnp reference — the number documents the
+  correctness-checking overhead, not TPU performance.  TPU-relevant
+  projections come from the roofline section instead.
+* ``cascade`` — the lr -> tinytf_flash -> ssm ladder
+  (``kernel_cascade_config``, CI-sized specs) served end-to-end by
+  ``BatchedCascadeEngine``, reporting accuracy and paid cost units
+  against the expert-only stream: the paper's cost-vs-accuracy claim on
+  the kernel path.
+* ``roofline`` — analytic per-item FLOPs/bytes of the *default* (full
+  size) level specs pushed through ``metrics.roofline.roofline_terms``
+  on the v5e envelope: where each level sits on the roofline and the
+  projected per-item latency floor the kernels are chasing.
+
+CSV convention: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(fn, *args, iters: int = 3) -> float:
+    """Median-free honest wall timing: warm once (compile), then average
+    ``iters`` synchronous calls."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def _bench_paths(tf_spec, ssm_spec, batch: int, seed: int) -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.kernel_students import (
+        ssm_student_init, ssm_student_logits, tinytf_flash_init,
+        tinytf_flash_logits)
+
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for name, spec, init, logits in (
+            ("tinytf_flash", tf_spec, tinytf_flash_init,
+             tinytf_flash_logits),
+            ("ssm", ssm_spec, ssm_student_init, ssm_student_logits)):
+        params = init(key, spec)
+        toks = jax.random.randint(jax.random.fold_in(key, 1),
+                                  (batch, spec.max_len), 1, spec.vocab,
+                                  jnp.int32)
+        fk = jax.jit(lambda p, t, s=spec: logits(p, t, s,
+                                                 use_kernels=True))
+        fr = jax.jit(lambda p, t, s=spec: logits(p, t, s,
+                                                 use_kernels=False))
+        tk, tr = _timed(fk, params, toks), _timed(fr, params, toks)
+        rows.append({"level": name, "batch": batch,
+                     "kernel_us_per_item": tk / batch * 1e6,
+                     "ref_us_per_item": tr / batch * 1e6,
+                     "interpret_overhead": tk / tr})
+        print(f"[kernel_levels] {name:>13} batch={batch:<3d} "
+              f"kernel={tk / batch * 1e6:9.1f} us/item  "
+              f"ref={tr / batch * 1e6:9.1f} us/item  "
+              f"(interpret overhead {tk / tr:.1f}x)")
+    return rows
+
+
+def _bench_cascade(tf_spec, ssm_spec, samples: int, seed: int) -> dict:
+    import numpy as np
+
+    from repro.core import (BatchedCascadeEngine, SimulatedExpert,
+                            kernel_cascade_config)
+    from repro.data import make_stream
+
+    stream = make_stream("hatespeech", seed=seed, n_samples=samples)
+    cfg = kernel_cascade_config(n_classes=stream.spec.n_classes, mu=3e-6,
+                                seed=seed, tf_flash_spec=tf_spec,
+                                ssm_spec=ssm_spec)
+    expert = SimulatedExpert(stream, "gpt-3.5-turbo")
+    eng = BatchedCascadeEngine(cfg, expert, n_streams=8)
+    t0 = time.time()
+    m = eng.run(stream)
+    dt = time.time() - t0
+    expert_acc = float(np.mean(stream.expert_labels("gpt-3.5-turbo")
+                               == stream.labels))
+    paid = float(m["total_cost_units"])
+    always = cfg.expert_cost * len(stream)
+    row = {
+        "samples": samples, "accuracy": m["accuracy"],
+        "expert_accuracy": expert_acc,
+        "expert_calls": int(np.sum(eng.expert_calls)),
+        "cost_units": paid, "expert_only_cost_units": always,
+        "cost_savings": 1.0 - paid / always,
+        "level_fractions": m["level_fractions"],
+        "items_per_sec": samples / dt,
+    }
+    print(f"[kernel_levels] cascade acc={row['accuracy']:.3f} "
+          f"(LLM {expert_acc:.3f})  cost={paid:.3g}/{always:.3g} units "
+          f"(savings {row['cost_savings']:.1%})  "
+          f"expert_calls={row['expert_calls']}/{samples}")
+    return row
+
+
+def _bench_roofline(batch: int = 8) -> list:
+    """Analytic v5e placement of the *default-size* level specs."""
+    from repro.metrics.costs import (ssm_student_flops,
+                                     tinytf_flash_flops)
+    from repro.metrics.roofline import V5E, roofline_terms
+    from repro.models.kernel_students import (SSMStudentSpec,
+                                              TinyTFFlashSpec)
+
+    tf, sm = TinyTFFlashSpec(), SSMStudentSpec()
+    rows = []
+    for name, spec, flops in (
+            ("tinytf_flash", tf, tinytf_flash_flops(tf)),
+            ("ssm", sm, ssm_student_flops(sm))):
+        # bytes/item: params read once per batch + activations streamed
+        # (fp32).  Embedding rows are gathered, not streamed whole.
+        n_params = sum(_param_count(name, spec))
+        act = spec.max_len * spec.d_model * 4.0 * 6  # resid/qkv/ff traffic
+        bytes_item = n_params * 4.0 / batch + act
+        t = roofline_terms(flops * batch, bytes_item * batch, 0.0, V5E)
+        rows.append({"level": name, "flops_per_item": flops,
+                     "bytes_per_item": bytes_item, **t})
+        print(f"[kernel_levels] roofline {name:>13} "
+              f"{flops:10.3g} FLOP/item  dominant={t['dominant']:<7} "
+              f"floor={t['bound_s'] / batch * 1e6:7.2f} us/item "
+              f"cf={t['compute_fraction']:.2f}")
+    return rows
+
+
+def _param_count(name, spec):
+    """Coarse parameter tally (embeddings dominate both students)."""
+    d = spec.d_model
+    yield spec.vocab * d
+    if name == "tinytf_flash":
+        yield spec.max_len * d
+        yield spec.n_layers * (4 * d * d + 2 * d * spec.d_ff)
+        yield 2 * d * d        # readout k/v
+    else:
+        d_in = spec.expand * d
+        yield spec.n_layers * (d * (2 * d_in + 2 * spec.d_state
+                                    + d_in // spec.head_dim)
+                               + d_in * d)
+    yield d * spec.n_classes
+
+
+def run(samples: int = 192, seed: int = 0, quick: bool = False) -> dict:
+    """Entry point (wired into benchmarks.run)."""
+    from repro.models.kernel_students import TINY_SSM_CI, TINY_TF_CI
+
+    # CI-sized specs: interpret-mode Pallas on CPU; matches the tier-1
+    # parity shapes (tests/test_kernel_levels.py).
+    tf_spec, ssm_spec = TINY_TF_CI, TINY_SSM_CI
+    if quick:
+        samples = min(samples, 96)
+
+    paths = _bench_paths(tf_spec, ssm_spec, batch=8, seed=seed)
+    cascade = _bench_cascade(tf_spec, ssm_spec, samples, seed)
+    roofline = _bench_roofline()
+    return {"paths": paths, "cascade": cascade, "roofline": roofline,
+            "headline_savings": cascade["cost_savings"],
+            "headline_accuracy": cascade["accuracy"]}
+
+
+if __name__ == "__main__":
+    run()

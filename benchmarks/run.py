@@ -22,14 +22,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip", nargs="*", default=[],
                     help="benchmark names to skip")
+    ap.add_argument("--roofline-artifacts", default="artifacts/dryrun",
+                    help="dry-run artifact dir aggregated by the "
+                         "roofline report (see docs/MODELS.md)")
     args = ap.parse_args()
 
     from benchmarks import (async_throughput, batched_throughput,
                             case_analysis, cost_equilibrium,
-                            distribution_shift, pipelined_throughput,
-                            pool_throughput, prefill_cost, regret,
-                            roofline_report, sharded_throughput, table1,
-                            tradeoff_curves)
+                            distribution_shift, kernel_levels,
+                            pipelined_throughput, pool_throughput,
+                            prefill_cost, regret, roofline_report,
+                            sharded_throughput, table1, tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -125,9 +128,17 @@ def main() -> None:
         sp = pf["rows"][0]["speedup_vs_paper_baseline"]
         record("prefill_cost", t0, f"speedup_vs_8xA100={sp:.0f}x")
 
+    if "kernel_levels" not in args.skip:
+        t0 = time.time()
+        kl = kernel_levels.run(samples=min(n, 192), seed=args.seed,
+                               quick=quick)
+        record("kernel_levels", t0,
+               f"cascade_acc={kl['headline_accuracy']:.3f}_"
+               f"savings={kl['headline_savings']:.2f}")
+
     if "roofline" not in args.skip:
         t0 = time.time()
-        rs = roofline_report.run()
+        rs = roofline_report.run(art_dir=args.roofline_artifacts)
         record("roofline_report", t0,
                f"rows={rs.get('n_rows', 0)}")
 

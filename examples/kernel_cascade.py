@@ -1,0 +1,57 @@
+"""Kernel-ladder serving example (real models on the Pallas path).
+
+Serves the same stream twice through ``BatchedCascadeEngine``: once with
+the default dense-student ladder (lr -> tinytf) and once with the kernel
+ladder (lr -> tinytf_flash -> ssm), whose upper levels route their
+batched route-pass forwards through the repo's Pallas kernels — flash
+attention for the causal layers, decode attention for the learned-query
+readout, the SSD chunked scan for the Mamba2 blocks (models/
+kernel_students.py, docs/MODELS.md).  Training still differentiates the
+jnp reference path; the two paths are tolerance-pinned by the tier-1
+parity tests.
+
+By default the CI-sized specs serve (``--ladder kernel-ci`` shapes) so
+the demo finishes in minutes on CPU, where Pallas runs in interpret
+mode; pass ``--full-specs`` on a TPU host for the default sizes.
+
+  PYTHONPATH=src python examples/kernel_cascade.py \
+      --dataset hatespeech --samples 384 --batch 8
+"""
+import argparse
+
+from repro.launch.serve import serve_stream_batched
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="hatespeech")
+    ap.add_argument("--samples", type=int, default=384)
+    ap.add_argument("--mu", type=float, default=3e-6)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--expert", default="simulated",
+                    choices=["model", "simulated"])
+    ap.add_argument("--full-specs", action="store_true",
+                    help="default-size level specs (TPU-appropriate; "
+                         "interpret-slow on CPU)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    ladder = "kernel" if args.full_specs else "kernel-ci"
+
+    print("== default ladder (lr -> tinytf, dense jnp students) ==")
+    m_dense = serve_stream_batched(
+        args.dataset, args.samples, args.mu, batch=args.batch,
+        expert_kind=args.expert, seed=args.seed, log_every=0)
+    print(f"\n== kernel ladder (lr -> tinytf_flash -> ssm, "
+          f"{ladder}) ==")
+    m_kernel = serve_stream_batched(
+        args.dataset, args.samples, args.mu, batch=args.batch,
+        expert_kind=args.expert, seed=args.seed, log_every=0,
+        ladder=ladder)
+    print(f"\nkernel vs dense ladder: accuracy "
+          f"{m_dense['accuracy']:.4f} -> {m_kernel['accuracy']:.4f}, "
+          f"expert calls {m_dense['expert_calls']} -> "
+          f"{m_kernel['expert_calls']}")
+
+
+if __name__ == "__main__":
+    main()

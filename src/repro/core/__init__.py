@@ -6,7 +6,8 @@ pipelined), the deferral-gate math, and the expert implementations.
 """
 from repro.core.batched import BatchedCascadeEngine
 from repro.core.cascade import (
-    CascadeConfig, LevelSpec, OnlineCascade, default_cascade_config)
+    CascadeConfig, LevelSpec, OnlineCascade, default_cascade_config,
+    kernel_cascade_config)
 from repro.core.deferral import (
     DeferralSpec, deferral_init, deferral_prob, reexploration_floor)
 from repro.core.distill import distill_students
@@ -19,6 +20,6 @@ __all__ = [
     "DeferralSpec", "deferral_init", "deferral_prob",
     "reexploration_floor",
     "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
-    "BatchedCascadeEngine",
+    "kernel_cascade_config", "BatchedCascadeEngine",
     "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",
 ]

@@ -34,6 +34,10 @@ from repro.core.deferral import (
     deferral_prob, deferral_update_terms, reexploration_floor)
 from repro.core.rng import sample_cache_indices, tick_rngs
 from repro.data.features import hash_bow, hash_ids
+from repro.models.kernel_students import (
+    SSMStudentSpec, TinyTFFlashSpec, ssm_student_init,
+    ssm_student_loss_weighted, ssm_student_predict, tinytf_flash_init,
+    tinytf_flash_loss_weighted, tinytf_flash_predict)
 from repro.models.students import (
     LRSpec, MLPSpec, TinyTFSpec, lr_init, lr_loss_weighted, lr_predict,
     mlp_init, mlp_loss_weighted, mlp_predict,
@@ -46,6 +50,8 @@ class LevelSpec:
     """Per-level hyperparameters (paper App. B.3 Tables 3/4 columns)."""
 
     kind: str                     # 'lr' | 'mlp' | 'tinytf' | 'tinytf_large'
+                                  # | 'tinytf_flash' | 'ssm' (kernel path;
+                                  # docs/MODELS.md has the level zoo)
     cost: float                   # c_i (model cost units, LR = 1)
     cache_size: int = 8
     batch_size: int = 8
@@ -69,6 +75,8 @@ class CascadeConfig:
     n_features: int = 2048        # hashed BoW dim for LR / MLP
     tf_spec: Optional[TinyTFSpec] = None
     mlp_spec: Optional[MLPSpec] = None
+    tf_flash_spec: Optional[TinyTFFlashSpec] = None
+    ssm_spec: Optional[SSMStudentSpec] = None
     sample_actions: bool = False  # paper samples action_i ~ f_i; default
                                   # thresholded at 0.5 (§3 calibration)
     hard_budget: Optional[int] = None  # max expert calls (None = mu-driven)
@@ -97,6 +105,44 @@ def default_cascade_config(n_classes: int, mu: float = 2e-6,
     return CascadeConfig(levels=tuple(levels), n_classes=n_classes,
                          expert_cost=expert_cost, mu=mu, beta0=beta0,
                          tf_spec=tf_spec, seed=seed)
+
+
+def kernel_cascade_config(n_classes: int, mu: float = 2e-6,
+                          expert_cost: float = 1.0e6,
+                          beta0: float = 1.0, seed: int = 0,
+                          tf_flash_spec: Optional[TinyTFFlashSpec] = None,
+                          ssm_spec: Optional[SSMStudentSpec] = None
+                          ) -> CascadeConfig:
+    """The kernel-path ladder: LR -> tinytf_flash -> ssm (-> expert).
+
+    Both upper levels route their batched forwards through the Pallas
+    kernels (flash/decode attention, SSD scan — models/kernel_students),
+    and their c_i deferral penalties are recomputed from the analytic
+    FLOP model (metrics.costs) so cost ordering stays honest when specs
+    are overridden.  ``serve.py --ladder kernel`` serves this config."""
+    from dataclasses import replace
+
+    from repro.metrics.costs import (
+        lr_flops, ssm_student_flops, tinytf_flash_flops)
+    tf_spec = replace(tf_flash_spec or TinyTFFlashSpec(),
+                      n_classes=n_classes)
+    ssm_sp = replace(ssm_spec or SSMStudentSpec(), n_classes=n_classes)
+    base = lr_flops(LRSpec(n_classes=n_classes))
+    cost_tf = tinytf_flash_flops(tf_spec) / base
+    cost_ssm = ssm_student_flops(ssm_sp) / base
+    levels = (
+        LevelSpec(kind="lr", cost=1.0, cache_size=8, batch_size=8,
+                  student_lr=0.5, beta_decay=0.97, calibration_factor=0.4),
+        LevelSpec(kind="tinytf_flash", cost=cost_tf, cache_size=16,
+                  batch_size=8, student_lr=1e-3, beta_decay=0.95,
+                  calibration_factor=0.3),
+        LevelSpec(kind="ssm", cost=cost_ssm, cache_size=32, batch_size=16,
+                  student_lr=7e-4, beta_decay=0.95,
+                  calibration_factor=0.4),
+    )
+    return CascadeConfig(levels=levels, n_classes=n_classes,
+                         expert_cost=expert_cost, mu=mu, beta0=beta0,
+                         tf_flash_spec=tf_spec, ssm_spec=ssm_sp, seed=seed)
 
 
 # The four per-level state trees that define a cascade's learned state.
@@ -151,6 +197,22 @@ class _Level:
             self.opt = adam(spec.student_lr)
             feat_shape = (cfg.n_features,)
             feat_dtype = np.float32
+        elif spec.kind == "tinytf_flash":
+            from dataclasses import replace
+            base = cfg.tf_flash_spec or TinyTFFlashSpec()
+            self.sspec = replace(base, n_classes=C)
+            self.params = tinytf_flash_init(k1, self.sspec)
+            self.opt = adam(spec.student_lr)
+            feat_shape = (self.sspec.max_len,)
+            feat_dtype = np.int32
+        elif spec.kind == "ssm":
+            from dataclasses import replace
+            base = cfg.ssm_spec or SSMStudentSpec()
+            self.sspec = replace(base, n_classes=C)
+            self.params = ssm_student_init(k1, self.sspec)
+            self.opt = adam(spec.student_lr)
+            feat_shape = (self.sspec.max_len,)
+            feat_dtype = np.int32
         else:
             base = cfg.tf_spec or TinyTFSpec(n_classes=C)
             if spec.kind == "tinytf_large":
@@ -215,6 +277,21 @@ class _Level:
 
             def student_loss(p, xb, yb, w):
                 return mlp_loss_weighted(p, xb, yb, w)
+        elif self.spec.kind == "tinytf_flash":
+            # kernel-path predict (flash + decode attention), ref-path
+            # loss (pallas_call has no VJP; the paths are tolerance-
+            # pinned equal — models/kernel_students, docs/MODELS.md)
+            def predict(params, x):
+                return tinytf_flash_predict(params, x[None], sspec)[0]
+
+            def student_loss(p, xb, yb, w):
+                return tinytf_flash_loss_weighted(p, xb, yb, w, sspec)
+        elif self.spec.kind == "ssm":
+            def predict(params, x):
+                return ssm_student_predict(params, x[None], sspec)[0]
+
+            def student_loss(p, xb, yb, w):
+                return ssm_student_loss_weighted(p, xb, yb, w, sspec)
         else:
             def predict(params, x):
                 return tinytf_predict(params, x[None], sspec)[0]
@@ -254,6 +331,12 @@ class _Level:
             self._predict_batch = lambda p, xb: lr_predict(p, xb)
         elif spec.kind == "mlp":
             self._predict_batch = lambda p, xb: mlp_predict(p, xb)
+        elif spec.kind == "tinytf_flash":
+            self._predict_batch = \
+                lambda p, xb: tinytf_flash_predict(p, xb, sspec)
+        elif spec.kind == "ssm":
+            self._predict_batch = \
+                lambda p, xb: ssm_student_predict(p, xb, sspec)
         else:
             self._predict_batch = lambda p, xb: tinytf_predict(p, xb, sspec)
 

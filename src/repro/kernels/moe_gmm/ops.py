@@ -18,6 +18,8 @@ def _on_tpu() -> bool:
                                              "interpret"))
 def moe_gmm(x, w, *, block_c: int = 256, block_f: int = 512,
             block_d: int = 512, interpret: Optional[bool] = None):
+    """Grouped matmul over capacity-bucketed expert tokens; interpret
+    mode auto-selected off-TPU."""
     if interpret is None:
         interpret = not _on_tpu()
     return gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,

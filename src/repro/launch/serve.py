@@ -95,7 +95,8 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                          seed: int = 0, log_every: int = 500,
                          mesh=None, updates_per_tick: str = "single",
                          async_delay: int = 0, pipeline_depth: int = 0,
-                         expert_workers: int = 1, per_lane: bool = False):
+                         expert_workers: int = 1, per_lane: bool = False,
+                         ladder: str = "default"):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -113,13 +114,29 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     sizes the expert annotation pool (sharded ``submit_many`` tickets),
     and ``per_lane=True`` commits each lane's annotation on the spread
     sub-deadline schedule with per-item updates (core/batched.py
-    per-lane commit mode — pair it with the pool).  All of it composes."""
+    per-lane commit mode — pair it with the pool).  ``ladder`` picks the
+    level stack: "default" = lr -> tinytf (dense jnp students);
+    "kernel" = lr -> tinytf_flash -> ssm with the upper levels' batched
+    forwards routed through the Pallas kernels at full default spec
+    sizes (TPU-appropriate; interpret-emulated and slow on CPU);
+    "kernel-ci" = the same ladder at the CI-sized specs the tier-1
+    parity tests pin (docs/MODELS.md).  All of it composes."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
                           samples, seed, workers=expert_workers)
-    cfg = default_cascade_config(n_classes=stream.spec.n_classes, mu=mu,
-                                 seed=seed, expert_cost=expert.cost)
+    if ladder == "default":
+        cfg = default_cascade_config(n_classes=stream.spec.n_classes,
+                                     mu=mu, seed=seed,
+                                     expert_cost=expert.cost)
+    else:
+        from repro.core import kernel_cascade_config
+        from repro.models.kernel_students import TINY_SSM_CI, TINY_TF_CI
+        spec_kw = ({"tf_flash_spec": TINY_TF_CI, "ssm_spec": TINY_SSM_CI}
+                   if ladder == "kernel-ci" else {})
+        cfg = kernel_cascade_config(n_classes=stream.spec.n_classes,
+                                    mu=mu, seed=seed,
+                                    expert_cost=expert.cost, **spec_kw)
     # history_limit=0: the serving loop only reads aggregate metrics, so
     # per-item history would grow without bound on long streams
     engine = BatchedCascadeEngine(cfg, expert, n_streams=batch, mesh=mesh,
@@ -134,6 +151,8 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     frac = metrics["expert_calls"] / len(stream)
     lanes = (f"batch={batch}" if mesh is None else
              f"batch={batch} mesh={dict(mesh.shape)}")
+    if ladder != "default":
+        lanes += f" ladder={ladder}"
     if async_delay:
         lanes += f" async_delay={async_delay}"
     if pipeline_depth:
@@ -316,6 +335,17 @@ def main():
                          "LLM stand-in (real expert compute); "
                          "'simulated' replays the stream's precomputed "
                          "noisy-teacher annotations (zero compute)")
+    ap.add_argument("--ladder", default="default",
+                    choices=["default", "kernel", "kernel-ci"],
+                    help="level stack (batched engine): 'default' = "
+                         "lr -> tinytf dense students; 'kernel' = "
+                         "lr -> tinytf_flash -> ssm with the upper "
+                         "forwards routed through the Pallas kernels "
+                         "(flash/decode attention, SSD scan) at "
+                         "full-size specs — TPU-appropriate, interpret-"
+                         "emulated on CPU; 'kernel-ci' = the same "
+                         "ladder at the CI-sized specs the tier-1 "
+                         "parity tests pin (docs/MODELS.md)")
     ap.add_argument("--seed", type=int, default=0,
                     help="stream/cascade RNG seed (core/rng.py per-tick "
                          "key discipline)")
@@ -330,7 +360,8 @@ def main():
                              async_delay=args.async_delay,
                              pipeline_depth=args.pipeline_depth,
                              expert_workers=args.expert_workers,
-                             per_lane=args.per_lane_commit)
+                             per_lane=args.per_lane_commit,
+                             ladder=args.ladder)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed)

@@ -11,6 +11,7 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.configs.base import ModelConfig
+from repro.models.kernel_students import SSMStudentSpec, TinyTFFlashSpec
 from repro.models.students import LRSpec, MLPSpec, TinyTFSpec
 
 
@@ -33,6 +34,44 @@ def tinytf_flops(spec: TinyTFSpec, train: bool = False) -> float:
                  + 4.0 * L * d * f)       # mlp
     total = per_layer * spec.n_layers + 2.0 * L * d * spec.vocab / spec.vocab
     total += 2.0 * d * spec.n_classes
+    return 2.0 * total if train else total
+
+
+def tinytf_flash_flops(spec: TinyTFFlashSpec, train: bool = False) -> float:
+    """Analytic FLOPs of one ``tinytf_flash`` forward (per item).
+
+    Causal attention halves the score/AV term relative to the full
+    ``tinytf`` mask (the flash kernel skips fully-masked kv tiles); the
+    decode-attention readout adds its k/v projections plus one
+    (1 x L) attention row."""
+    L, d, f = spec.max_len, spec.d_model, spec.d_ff
+    per_layer = (8.0 * L * d * d          # qkvo projections
+                 + 2.0 * L * L * d        # causal scores + AV (~L^2/2 pairs)
+                 + 4.0 * L * d * f)       # mlp
+    total = per_layer * spec.n_layers
+    total += 4.0 * L * d * d              # readout k/v projections
+    total += 4.0 * L * d                  # decode readout scores + AV
+    total += 2.0 * d * spec.n_classes
+    return 2.0 * total if train else total
+
+
+def ssm_student_flops(spec: SSMStudentSpec, train: bool = False) -> float:
+    """Analytic FLOPs of one ``ssm`` student forward (per item).
+
+    SSD chunked terms per block: in_proj, depthwise conv, intra-chunk
+    (L x Lc) scores + outputs, chunk-state build + inter-chunk read
+    (each 2*L*N*d_inner), gate + out_proj."""
+    L, d = spec.max_len, spec.d_model
+    d_in = spec.expand * d
+    N = spec.d_state
+    H = d_in // spec.head_dim
+    Lc = min(spec.chunk, L)
+    per_block = (2.0 * L * d * (2 * d_in + 2 * N + H)   # in_proj
+                 + 2.0 * L * spec.d_conv * (d_in + 2 * N)  # causal conv
+                 + 2.0 * L * Lc * (N + d_in)            # intra-chunk SSD
+                 + 4.0 * L * N * d_in                   # chunk states in/out
+                 + 2.0 * L * d_in * d)                  # out_proj
+    total = per_block * spec.n_layers + 2.0 * d * spec.n_classes
     return 2.0 * total if train else total
 
 
@@ -80,11 +119,19 @@ def relative_costs(lr_spec: LRSpec, tf_spec: TinyTFSpec,
                    expert_cfg: ModelConfig = None,
                    doc_len: int = 256,
                    mlp_spec: MLPSpec = None,
+                   tf_flash_spec: TinyTFFlashSpec = None,
+                   ssm_spec: SSMStudentSpec = None,
                    extra: Dict[str, float] = None) -> CostModel:
+    """Build the c_i table (LR = 1) from the analytic per-model FLOPs;
+    optional specs add their level kind to the table."""
     base = lr_flops(lr_spec)
     units = {"lr": 1.0, "tinytf": tinytf_flops(tf_spec) / base}
     if mlp_spec is not None:
         units["mlp"] = mlp_flops(mlp_spec) / base
+    if tf_flash_spec is not None:
+        units["tinytf_flash"] = tinytf_flash_flops(tf_flash_spec) / base
+    if ssm_spec is not None:
+        units["ssm"] = ssm_student_flops(ssm_spec) / base
     if expert_cfg is not None:
         units["expert"] = expert_prefill_flops(expert_cfg, doc_len) / base
     if extra:

@@ -139,6 +139,8 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions,
 # ---------------------------------------------------------------------------
 def swa_prefill_attention(q, k, v, *, window: int, q_offset: int = 0,
                           chunk: int = 1024) -> jax.Array:
+    """Banded prefill attention for a sliding window: scans q chunks,
+    slicing only the [q_start - window, q_end) kv band each step."""
     B, S, H, hd = q.shape
     K = k.shape[2]
     chunk = min(chunk, S)

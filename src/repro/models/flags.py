@@ -13,5 +13,6 @@ UNROLL_FOR_COST_ANALYSIS = False
 
 
 def set_unroll(v: bool) -> None:
+    """Toggle scan unrolling for HloCostAnalysis probes (see module doc)."""
     global UNROLL_FOR_COST_ANALYSIS
     UNROLL_FOR_COST_ANALYSIS = v

@@ -10,15 +10,18 @@ VOCAB_PAD = 512  # pad vocab so the lm-head dim divides the model axis
 
 
 def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to the next VOCAB_PAD multiple (lm-head dim)."""
     return ((cfg.vocab + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
 
 
 def trunc_normal(key, shape, std, dtype):
+    """Truncated-normal (+-2 sigma) init at the given std, cast to dtype."""
     return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
             * std).astype(dtype)
 
 
 def dense_init(key, d_in, d_out, dtype, std=None):
+    """Dense weight init; std defaults to the fan-in rule 1/sqrt(d_in)."""
     std = std if std is not None else d_in ** -0.5
     return trunc_normal(key, (d_in, d_out), std, dtype)
 
@@ -27,6 +30,7 @@ def dense_init(key, d_in, d_out, dtype, std=None):
 # Norms.  Scales kept in fp32; compute in fp32, cast back.
 # ---------------------------------------------------------------------------
 def init_norm(cfg: ModelConfig, d=None):
+    """Norm params for cfg.norm (layernorm: scale+bias; rmsnorm: scale)."""
     d = d or cfg.d_model
     if cfg.norm == "layernorm":
         return {"scale": jnp.ones((d,), jnp.float32),
@@ -35,6 +39,7 @@ def init_norm(cfg: ModelConfig, d=None):
 
 
 def apply_norm(params, x, cfg: ModelConfig, eps=1e-6):
+    """Layer/RMS norm per cfg.norm; fp32 compute, cast back to x.dtype."""
     dtype = x.dtype
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
@@ -58,16 +63,19 @@ def rms_norm_headwise(x, scale, eps=1e-6):
 # Embedding / LM head
 # ---------------------------------------------------------------------------
 def init_embed(key, cfg: ModelConfig):
+    """Token embedding table at the padded vocab size."""
     v = padded_vocab(cfg)
     return {"table": trunc_normal(key, (v, cfg.d_model), cfg.d_model ** -0.5,
                                   cfg.jnp_dtype)}
 
 
 def embed(params, tokens, cfg: ModelConfig):
+    """Gather token embeddings: (...,) ids -> (..., d_model)."""
     return params["table"][tokens]
 
 
 def init_lm_head(key, cfg: ModelConfig):
+    """LM head weights; empty when cfg ties them to the embedding."""
     if cfg.tie_embeddings:
         return {}
     v = padded_vocab(cfg)
@@ -103,6 +111,7 @@ def softmax_xent(logits, targets, mask=None):
 # Dense MLP
 # ---------------------------------------------------------------------------
 def init_mlp(key, cfg: ModelConfig):
+    """Dense-MLP weights (in/out, plus gate for swiglu)."""
     d, f = cfg.d_model, cfg.d_ff
     ks = jax.random.split(key, 3)
     p = {"w_in": dense_init(ks[0], d, f, cfg.jnp_dtype),
@@ -113,6 +122,7 @@ def init_mlp(key, cfg: ModelConfig):
 
 
 def apply_mlp(params, x, cfg: ModelConfig):
+    """Position-wise MLP: gelu or swiglu per cfg.act."""
     h = x @ params["w_in"]
     if cfg.act == "swiglu":
         h = jax.nn.silu(x @ params["w_gate"]) * h

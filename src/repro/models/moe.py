@@ -43,6 +43,7 @@ _SHARD_MAP_CHECK_KW = (
 
 
 def init_moe(key, cfg: ModelConfig):
+    """Router + per-expert SwiGLU weights, stacked on a leading E axis."""
     m = cfg.moe
     d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
     ks = jax.random.split(key, 4)
@@ -55,6 +56,7 @@ def init_moe(key, cfg: ModelConfig):
 
 
 def capacity_for(n_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert token capacity (top_k * T / E * factor, rounded to 4)."""
     m = cfg.moe
     c = math.ceil(m.top_k * n_tokens / m.num_experts * m.capacity_factor)
     return max(4, ((c + 3) // 4) * 4)

@@ -24,6 +24,7 @@ from repro.models.layers import dense_init, trunc_normal
 
 
 def dims(cfg: ModelConfig):
+    """Derived mamba dims for ``cfg.ssm``: (d_inner, n_heads, d_xbc)."""
     s = cfg.ssm
     d_in = s.expand * cfg.d_model
     n_heads = d_in // s.head_dim
@@ -32,6 +33,7 @@ def dims(cfg: ModelConfig):
 
 
 def init_mamba(key, cfg: ModelConfig):
+    """Initialize one Mamba2 block's params (layout in module docstring)."""
     s = cfg.ssm
     d = cfg.d_model
     d_in, n_heads, d_xbc = dims(cfg)
@@ -153,8 +155,15 @@ def ssd_chunked(x, adt, dt, Bmat, Cmat, chunk: int,
 
 
 def mamba_forward(params, x, cfg: ModelConfig,
-                  conv_prev=None, ssm_state=None, return_state=False):
-    """Full-sequence Mamba2 block.  x: (B, S, D) -> (B, S, D)."""
+                  conv_prev=None, ssm_state=None, return_state=False,
+                  ssd_impl=None):
+    """Full-sequence Mamba2 block.  x: (B, S, D) -> (B, S, D).
+
+    ``ssd_impl`` swaps the inner SSD scan: it must match
+    ``ssd_chunked``'s signature ``(x, adt, dt, B, C, chunk,
+    init_state=...) -> (y, final_state)``.  Default is the jnp chunked
+    path (differentiable); ``models.kernel_students`` passes an adapter
+    over the Pallas ``kernels.ssd_scan`` for serving forwards."""
     s = cfg.ssm
     d_in, n_heads, d_xbc = dims(cfg)
     B, S, D = x.shape
@@ -172,8 +181,9 @@ def mamba_forward(params, x, cfg: ModelConfig,
     A = -jnp.exp(params["A_log"])                         # (H,)
     adt = A * dt                                          # (B, S, H)
     xh = xi.reshape(B, S, n_heads, s.head_dim)
-    y, h_final = ssd_chunked(xh, adt, dt, Bm, Cm, s.chunk,
-                             init_state=ssm_state)
+    impl = ssd_impl if ssd_impl is not None else ssd_chunked
+    y, h_final = impl(xh, adt, dt, Bm, Cm, s.chunk,
+                      init_state=ssm_state)
     y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(B, S, d_in)
 

@@ -29,12 +29,16 @@ from repro.models.layers import dense_init
 
 @dataclass(frozen=True)
 class LRSpec:
+    """Logistic-regression student over hashed bag-of-words."""
+
     n_features: int = 2048
     n_classes: int = 2
 
 
 @dataclass(frozen=True)
 class TinyTFSpec:
+    """Bidirectional tiny-transformer encoder classifier."""
+
     vocab: int = 4096          # hashed token ids
     max_len: int = 128
     d_model: int = 128
@@ -48,19 +52,23 @@ class TinyTFSpec:
 # Logistic regression
 # ---------------------------------------------------------------------------
 def lr_init(key, spec: LRSpec):
+    """Zero-initialized weights/bias (convex objective; OGD from 0)."""
     return {"w": jnp.zeros((spec.n_features, spec.n_classes), jnp.float32),
             "b": jnp.zeros((spec.n_classes,), jnp.float32)}
 
 
 def lr_logits(params, feats):
+    """(B, n_features) -> (B, n_classes) affine logits."""
     return feats @ params["w"] + params["b"]
 
 
 def lr_predict(params, feats):
+    """Class probabilities (softmax over the LR logits)."""
     return jax.nn.softmax(lr_logits(params, feats), axis=-1)
 
 
 def lr_loss(params, feats, labels):
+    """Mean xent (the unweighted sequential-reference objective)."""
     logits = lr_logits(params, feats)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
@@ -80,6 +88,7 @@ def lr_loss_weighted(params, feats, labels, w):
 
 
 def tinytf_loss_weighted(params, tokens, labels, w, spec: "TinyTFSpec"):
+    """Per-item-weighted xent on tiny-transformer logits."""
     return _weighted_xent(tinytf_logits(params, tokens, spec), labels, w)
 
 
@@ -88,6 +97,8 @@ def tinytf_loss_weighted(params, tokens, labels, w, spec: "TinyTFSpec"):
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class MLPSpec:
+    """Deep tanh MLP over hashed bag-of-words."""
+
     n_features: int = 2048
     hidden: int = 1024
     n_layers: int = 4          # hidden layers (tanh)
@@ -95,6 +106,7 @@ class MLPSpec:
 
 
 def mlp_init(key, spec: MLPSpec):
+    """Fan-in-init hidden layers; zero-init classifier head."""
     dims = [spec.n_features] + [spec.hidden] * spec.n_layers
     keys = jax.random.split(key, spec.n_layers + 1)
     params = {
@@ -108,6 +120,7 @@ def mlp_init(key, spec: MLPSpec):
 
 
 def mlp_logits(params, feats):
+    """Tanh MLP chain -> (B, n_classes) logits."""
     h = feats
     for lp in params["layers"]:
         h = jnp.tanh(h @ lp["w"] + lp["b"])
@@ -115,10 +128,12 @@ def mlp_logits(params, feats):
 
 
 def mlp_predict(params, feats):
+    """Class probabilities (softmax over the MLP logits)."""
     return jax.nn.softmax(mlp_logits(params, feats), axis=-1)
 
 
 def mlp_loss_weighted(params, feats, labels, w):
+    """Per-item-weighted xent on MLP logits."""
     return _weighted_xent(mlp_logits(params, feats), labels, w)
 
 
@@ -126,6 +141,7 @@ def mlp_loss_weighted(params, feats, labels, w):
 # Tiny transformer encoder classifier
 # ---------------------------------------------------------------------------
 def tinytf_init(key, spec: TinyTFSpec):
+    """Embed/pos tables + per-layer attn/MLP weights; zero-init head."""
     ks = jax.random.split(key, 2 + spec.n_layers)
     d, f, H = spec.d_model, spec.d_ff, spec.n_heads
     params = {
@@ -184,10 +200,12 @@ def tinytf_logits(params, tokens, spec: TinyTFSpec):
 
 
 def tinytf_predict(params, tokens, spec: TinyTFSpec):
+    """Class probabilities (softmax over the transformer logits)."""
     return jax.nn.softmax(tinytf_logits(params, tokens, spec), axis=-1)
 
 
 def tinytf_loss(params, tokens, labels, spec: TinyTFSpec):
+    """Mean xent (the unweighted sequential-reference objective)."""
     logits = tinytf_logits(params, tokens, spec)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]

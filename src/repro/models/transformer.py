@@ -91,6 +91,7 @@ def _init_period_stack(key, cfg: ModelConfig, n_periods: int):
 
 
 def init_params(key, cfg: ModelConfig):
+    """Full zoo-model parameter tree (embed, block stack, head, encoder)."""
     ks = jax.random.split(key, 5)
     params = {
         "embed": init_embed(ks[0], cfg),

@@ -1,0 +1,255 @@
+"""Kernel-backed cascade levels: kernel-vs-ref parity + engine contracts.
+
+Three layers of contract, per ISSUE 6 / docs/MODELS.md:
+
+1. **Ops-vs-ref at level shapes** — the Pallas kernels (CPU interpret
+   mode) match their jnp oracles at exactly the shapes the new levels
+   run: short causal sequences, decode readout over odd-length masked
+   tails, SSD at the student chunking.
+2. **Path parity** — a level's kernel-path logits (what the route pass
+   serves) match its reference-path logits (what the loss
+   differentiates) within the documented tolerance, including pad-tail
+   items.
+3. **Engine contracts** — the lr -> tinytf_flash -> ssm ladder passes
+   the same harness parity contracts as every other level kind: S=1
+   bitwise vs the sequential reference, pipeline/pool execution axes
+   change nothing, mesh cells match at the SPMD float tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness import (MESH_ATOL, MESH_RTOL, assert_run_parity,
+                     batched_engine, run_pair, sequential_engine)
+from repro.core import CascadeConfig, LevelSpec
+from repro.data import make_stream
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.kernel_students import (
+    TINY_SSM_CI, TINY_TF_CI, ssm_student_init, ssm_student_logits,
+    tinytf_flash_init, tinytf_flash_logits)
+
+# CI-sized specs: interpret-mode Pallas is slow, so the engine tests run
+# the smallest shapes the kernels' block constraints allow.
+TINY_TF = TINY_TF_CI
+TINY_SSM = TINY_SSM_CI
+
+_CACHE = {}
+
+
+def _stream_cfg(n=48):
+    if "setup" not in _CACHE:
+        stream = make_stream("hatespeech", seed=0, n_samples=n)
+        levels = (
+            LevelSpec(kind="lr", cost=1.0, cache_size=8, batch_size=8,
+                      student_lr=0.5, beta_decay=0.9,
+                      calibration_factor=0.4),
+            LevelSpec(kind="tinytf_flash", cost=50.0, cache_size=8,
+                      batch_size=4, student_lr=1e-3, beta_decay=0.9,
+                      calibration_factor=0.3),
+            LevelSpec(kind="ssm", cost=200.0, cache_size=8, batch_size=4,
+                      student_lr=7e-4, beta_decay=0.9,
+                      calibration_factor=0.4),
+        )
+        cfg = CascadeConfig(
+            levels=levels, n_classes=stream.spec.n_classes,
+            expert_cost=1.0e6, mu=3e-6, n_features=512,
+            tf_flash_spec=TINY_TF, ssm_spec=TINY_SSM, seed=0)
+        _CACHE["setup"] = (stream, cfg)
+    return _CACHE["setup"]
+
+
+def _tokens_with_tails(lengths, max_len, vocab, seed=0):
+    """(B, max_len) int32 batch with the given valid lengths (pads at
+    the end) — the masked-tail shapes the levels actually see."""
+    toks = np.zeros((len(lengths), max_len), np.int32)
+    rng = np.random.default_rng(seed)
+    for i, n in enumerate(lengths):
+        toks[i, :n] = rng.integers(1, vocab, n)
+    return jnp.asarray(toks)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# 1. ops vs ref at the level shapes (odd-length / masked tails included)
+# ---------------------------------------------------------------------------
+def test_flash_attention_at_level_shape():
+    B, S, H, hd = 4, TINY_TF.max_len, TINY_TF.n_heads, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (_rand(ks[i], (B, S, H, hd)) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, block_q=TINY_TF.block_q,
+                          block_kv=TINY_TF.block_kv)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3),
+                        causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("nvalid", [1, 7, 17, 31, 32])
+def test_decode_readout_at_level_shape(nvalid):
+    """The readout's pos mask: odd valid lengths, incl. the full and
+    nearly-full tails."""
+    B, W, H, hd = 2, TINY_TF.max_len, TINY_TF.n_heads, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, 1, H, hd))
+    k = _rand(ks[1], (B, W, H, hd))
+    v = _rand(ks[2], (B, W, H, hd))
+    pos = jnp.where(jnp.arange(W) < nvalid, jnp.arange(W), -1)
+    out = decode_attention(q, k, v, pos, block_kv=TINY_TF.block_kv)
+    ref = decode_attention_ref(
+        q[:, 0].reshape(B, H, 1, hd), k, v,
+        jnp.broadcast_to(pos[None], (B, W))).reshape(B, 1, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # the masked tail must be inert: scrambling empty slots is a no-op
+    if nvalid < W:
+        out2 = decode_attention(q, k.at[:, nvalid:].set(77.0),
+                                v.at[:, nvalid:].set(-77.0), pos,
+                                block_kv=TINY_TF.block_kv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                                   atol=1e-6)
+
+
+def test_ssd_scan_at_level_shape():
+    s = TINY_SSM
+    Bsz, S = 2, s.max_len
+    H = s.expand * s.d_model // s.head_dim
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = _rand(ks[0], (Bsz, S, H, s.head_dim))
+    dt = jax.nn.softplus(_rand(ks[1], (Bsz, S, H)))
+    adt = -0.4 * dt
+    B = _rand(ks[2], (Bsz, S, s.d_state))
+    C = _rand(ks[3], (Bsz, S, s.d_state))
+    out = ssd_scan(x, adt, dt, B, C, chunk=s.chunk)
+    ref = ssd_scan_ref(x, adt, dt, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# 2. kernel path vs reference path, whole-level logits
+# ---------------------------------------------------------------------------
+def _randomized(params, key, d, n_classes):
+    """Students init their heads at zero; parity on logits needs a
+    non-degenerate head."""
+    params = dict(params)
+    params["cls_w"] = jax.random.normal(key, (d, n_classes)) * 0.1
+    return params
+
+
+def test_tinytf_flash_paths_agree():
+    key = jax.random.PRNGKey(3)
+    params = _randomized(tinytf_flash_init(key, TINY_TF),
+                         jax.random.fold_in(key, 1), TINY_TF.d_model,
+                         TINY_TF.n_classes)
+    toks = _tokens_with_tails([32, 17, 7, 1], TINY_TF.max_len,
+                              TINY_TF.vocab)
+    kernel = tinytf_flash_logits(params, toks, TINY_TF, use_kernels=True)
+    ref = tinytf_flash_logits(params, toks, TINY_TF, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ssm_paths_agree():
+    key = jax.random.PRNGKey(4)
+    params = _randomized(ssm_student_init(key, TINY_SSM),
+                         jax.random.fold_in(key, 1), TINY_SSM.d_model,
+                         TINY_SSM.n_classes)
+    toks = _tokens_with_tails([32, 19, 5, 1], TINY_SSM.max_len,
+                              TINY_SSM.vocab)
+    kernel = ssm_student_logits(params, toks, TINY_SSM, use_kernels=True)
+    ref = ssm_student_logits(params, toks, TINY_SSM, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_tinytf_flash_pad_independence():
+    """Causality + pos-masked readout: logits of an item must not
+    depend on how much pad tail follows it (same doc, same buffer)."""
+    key = jax.random.PRNGKey(5)
+    params = _randomized(tinytf_flash_init(key, TINY_TF),
+                         jax.random.fold_in(key, 1), TINY_TF.d_model,
+                         TINY_TF.n_classes)
+    toks = _tokens_with_tails([11], TINY_TF.max_len, TINY_TF.vocab, seed=7)
+    # a second batch whose OTHER row differs: row 0's logits must match
+    toks2 = jnp.concatenate(
+        [toks, _tokens_with_tails([29], TINY_TF.max_len, TINY_TF.vocab,
+                                  seed=8)])
+    a = tinytf_flash_logits(params, toks, TINY_TF, use_kernels=True)[0]
+    b = tinytf_flash_logits(params, toks2, TINY_TF, use_kernels=True)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 3. engine contracts for the kernel ladder
+# ---------------------------------------------------------------------------
+def test_s1_bitwise_parity_kernel_ladder():
+    """S=1 batched == sequential reference, bitwise state, on the full
+    lr -> tinytf_flash -> ssm ladder."""
+    stream, cfg = _stream_cfg()
+    ref = sequential_engine(cfg, stream)
+    new = batched_engine(cfg, stream, n_streams=1)
+    m_ref, m_new = run_pair(ref, new, stream)
+    assert_run_parity(ref, m_ref, new, m_new,
+                      history_keys=("level", "expert_called"), costs=True)
+
+
+def _d2_reference():
+    if "d2ref" not in _CACHE:
+        stream, cfg = _stream_cfg()
+        eng = batched_engine(cfg, stream, n_streams=8, max_delay=2)
+        _CACHE["d2ref"] = (eng, eng.run(stream))
+    return _CACHE["d2ref"]
+
+
+def test_pipeline_composition_kernel_ladder():
+    """pipeline_depth is a pure execution axis for kernel levels too."""
+    stream, cfg = _stream_cfg()
+    ref, m_ref = _d2_reference()
+    new = batched_engine(cfg, stream, n_streams=8, max_delay=2,
+                         pipeline_depth=2)
+    m_new = new.run(stream)
+    assert_run_parity(ref, m_ref, new, m_new,
+                      history_keys=("level", "expert_called"), costs=True)
+
+
+def test_pool_composition_kernel_ladder():
+    """Per-lane commits on the kernel ladder are bitwise invariant to
+    the expert pool's worker count."""
+    stream, cfg = _stream_cfg()
+    r1 = batched_engine(cfg, stream, n_streams=8, max_delay=2,
+                        per_lane=True, expert_kw={"workers": 1})
+    r2 = batched_engine(cfg, stream, n_streams=8, max_delay=2,
+                        per_lane=True, expert_kw={"workers": 2})
+    m1, m2 = run_pair(r1, r2, stream)
+    assert_run_parity(r1, m1, r2, m2,
+                      history_keys=("level", "expert_called"), costs=True)
+
+
+@pytest.mark.multidevice
+def test_mesh_composition_kernel_ladder():
+    """Lane sharding the kernel ladder matches the unmeshed engine at
+    the documented SPMD float tolerance."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI job: "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.launch.mesh import make_mesh
+    stream, cfg = _stream_cfg()
+    ref = batched_engine(cfg, stream, n_streams=8)
+    new = batched_engine(cfg, stream, n_streams=8,
+                         mesh=make_mesh((8, 1), ("data", "model")))
+    m_ref, m_new = run_pair(ref, new, stream)
+    assert_run_parity(ref, m_ref, new, m_new, state="allclose",
+                      attrs=("params", "dparams"),
+                      history_keys=("level", "expert_called"),
+                      rtol=MESH_RTOL, atol=MESH_ATOL)
