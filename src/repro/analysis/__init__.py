@@ -1,0 +1,18 @@
+"""cascade-lint: repo-specific static analysis for the cascade engines.
+
+Machine-enforces the invariants every parity test assumes — the per-tick
+RNG discipline, crc32-not-``hash()`` determinism, jit purity, the expert
+pool's lock discipline, the §8 kernel/level contract, and the README docs
+contract.  Run ``python -m repro.analysis --strict`` (the CI gate) or see
+docs/ANALYSIS.md for the checker catalog and suppression policy.
+"""
+from repro.analysis.engine import (
+    AnalysisResult, Finding, ModuleContext, RepoContext, Rule, fingerprint,
+    load_baseline, render_baseline, run_analysis)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "AnalysisResult", "Finding", "ModuleContext", "RepoContext", "Rule",
+    "fingerprint", "load_baseline", "render_baseline", "run_analysis",
+    "ALL_RULES",
+]

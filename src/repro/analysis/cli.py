@@ -1,0 +1,97 @@
+"""The ``python -m repro.analysis`` command line.
+
+Exit codes: 0 clean (or informational run), 1 new findings under
+``--strict``, 2 bad invocation.  Findings already in the committed
+baseline (``analysis-baseline.txt`` at the repo root) are reported but
+never fail the run — the baseline is a ratchet that may only shrink.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.engine import (
+    DEFAULT_PATHS, Finding, fingerprint, load_baseline, render_baseline,
+    run_analysis)
+from repro.analysis.rules import ALL_RULES
+
+
+def find_repo_root(start: Optional[Path] = None) -> Path:
+    """Nearest ancestor with a pyproject.toml (else the start dir)."""
+    cur = (start or Path.cwd()).resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return cur
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="cascade-lint: repo-specific static analysis "
+                    "(CAS001-CAS006; see docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: nearest pyproject.toml)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any non-baselined finding (the CI gate)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: <root>/"
+                         "analysis-baseline.txt)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "and exit 0")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the checker catalog and exit")
+    return ap
+
+
+def _emit(findings: List[Finding], baselined: List[Finding],
+          as_json: bool, suppressed: int, files: int) -> None:
+    if as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+        return
+    for f in findings:
+        print(f.render())
+    for f in baselined:
+        print(f"{f.render()}  [baselined]")
+    print(f"cascade-lint: {len(findings)} finding(s), "
+          f"{len(baselined)} baselined, {suppressed} suppressed, "
+          f"{files} file(s) scanned")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Entry point; returns the process exit code."""
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        for cls in ALL_RULES:
+            print(f"{cls.id}  {cls.title}")
+        return 0
+    root = (args.root or find_repo_root()).resolve()
+    if not root.is_dir():
+        print(f"error: root {root} is not a directory", file=sys.stderr)
+        return 2
+    baseline_path = args.baseline or (root / "analysis-baseline.txt")
+
+    result = run_analysis(root, paths=args.paths or None)
+    if args.write_baseline:
+        baseline_path.write_text(render_baseline(result.findings),
+                                 encoding="utf-8")
+        print(f"wrote {len(result.findings)} fingerprint(s) to "
+              f"{baseline_path}")
+        return 0
+
+    known = load_baseline(baseline_path)
+    fresh = [f for f in result.findings if fingerprint(f) not in known]
+    old = [f for f in result.findings if fingerprint(f) in known]
+    _emit(fresh, old, args.json, result.suppressed, result.files)
+    if args.strict and fresh:
+        return 1
+    return 0

@@ -1,0 +1,268 @@
+"""cascade-lint rule engine: findings, suppressions, baseline, runner.
+
+The engine is deliberately tiny: a rule is a class with an ``id`` and one
+or both of ``check_module`` (AST of one file) / ``check_repo`` (whole-tree
+structural contracts).  Everything repo-specific lives in
+``repro.analysis.rules``; this module only knows how to walk files, parse
+them, apply suppressions, and diff findings against a committed baseline.
+
+Suppression syntax (checked per physical line)::
+
+    x = hash(s)          # cascade-lint: disable=CAS002
+    # cascade-lint: disable-next-line=CAS001,CAS002
+    rng = np.random.default_rng()
+    # cascade-lint: disable-file=CAS003       (first 20 lines of the file)
+
+Baseline format (one fingerprint per line, ``--write-baseline`` emits it)::
+
+    CAS002 src/repro/data/streams.py a1b2c3d4  # hash() in seed position
+
+Fingerprints hash (rule, path, message) — NOT the line number — so
+findings don't churn when unrelated edits move code.  The baseline is a
+ratchet: it may only shrink.  (crc32, not ``hash()``: rule CAS002 applies
+to this tool too.)
+"""
+from __future__ import annotations
+
+import ast
+import re
+import zlib
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*cascade-lint:\s*disable(?P<kind>-file|-next-line)?=(?P<ids>[A-Z0-9, ]+)")
+
+#: directories never scanned, wherever they appear
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache", "build",
+              "dist"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a file position."""
+
+    rule: str          # "CAS001" ... "CAS006" (or "CAS000" for parse errors)
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    col: int           # 0-based
+    message: str
+    severity: str = "error"   # "error" | "warning"
+
+    def render(self) -> str:
+        """``path:line:col: RULE message`` — the CLI output line."""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def fingerprint(finding: Finding) -> str:
+    """Line-number-free identity of a finding, for the baseline ratchet."""
+    raw = f"{finding.rule}:{finding.path}:{finding.message}".encode()
+    return f"{zlib.crc32(raw) & 0xFFFFFFFF:08x}"
+
+
+@dataclass
+class ModuleContext:
+    """One parsed file as the per-module rules see it."""
+
+    root: Path         # repo root (absolute)
+    path: Path         # absolute file path
+    rel: str           # posix path relative to root
+    source: str
+    lines: List[str]
+    tree: ast.AST
+
+
+@dataclass
+class RepoContext:
+    """Whole-tree view for structural rules (kernel/docs contracts)."""
+
+    root: Path
+    modules: List[ModuleContext] = field(default_factory=list)
+
+    def module(self, rel: str) -> Optional[ModuleContext]:
+        """The scanned module at repo-relative path ``rel``, if any."""
+        for m in self.modules:
+            if m.rel == rel:
+                return m
+        return None
+
+
+class Rule:
+    """Base checker: subclasses set ``id``/``title`` and override one hook."""
+
+    id: str = "CAS000"
+    title: str = ""
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Finding]:
+        """Per-file findings (default: none)."""
+        return iter(())
+
+    def check_repo(self, repo: RepoContext) -> Iterator[Finding]:
+        """Whole-tree findings (default: none)."""
+        return iter(())
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def _suppressions(lines: Sequence[str]) -> Tuple[Set[str], Dict[int, Set[str]]]:
+    """Parse ``cascade-lint:`` comments -> (file-wide ids, per-line ids).
+
+    Per-line ids are keyed by the 1-based line a finding must sit on for
+    the suppression to apply (``disable-next-line`` keys the line below
+    the comment).
+    """
+    file_ids: Set[str] = set()
+    line_ids: Dict[int, Set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group("ids").split(",") if s.strip()}
+        kind = m.group("kind")
+        if kind == "-file":
+            if i <= 20:      # file-wide pragmas must sit near the top
+                file_ids |= ids
+        elif kind == "-next-line":
+            line_ids.setdefault(i + 1, set()).update(ids)
+        else:
+            line_ids.setdefault(i, set()).update(ids)
+    return file_ids, line_ids
+
+
+def _is_suppressed(finding: Finding, file_ids: Set[str],
+                   line_ids: Dict[int, Set[str]]) -> bool:
+    if finding.rule in file_ids:
+        return True
+    return finding.rule in line_ids.get(finding.line, set())
+
+
+# ---------------------------------------------------------------------------
+# file walking / parsing
+# ---------------------------------------------------------------------------
+def iter_py_files(root: Path, paths: Sequence[str]) -> Iterator[Path]:
+    """Yield ``*.py`` files under each path (sorted, skip-list applied)."""
+    for p in paths:
+        base = (root / p) if not Path(p).is_absolute() else Path(p)
+        if base.is_file() and base.suffix == ".py":
+            yield base
+            continue
+        if not base.is_dir():
+            continue
+        for f in sorted(base.rglob("*.py")):
+            if any(part in _SKIP_DIRS or part.startswith(".")
+                   for part in f.relative_to(base).parts[:-1]):
+                continue
+            yield f
+
+
+def load_module(root: Path, path: Path) -> Tuple[Optional[ModuleContext],
+                                                 Optional[Finding]]:
+    """Parse one file; on a syntax error return a CAS000 finding instead."""
+    rel = path.relative_to(root).as_posix() if path.is_relative_to(root) \
+        else path.as_posix()
+    source = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return None, Finding("CAS000", rel, e.lineno or 1, e.offset or 0,
+                             f"syntax error: {e.msg}")
+    return ModuleContext(root=root, path=path, rel=rel, source=source,
+                         lines=source.splitlines(), tree=tree), None
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def load_baseline(path: Path) -> Set[str]:
+    """Read committed fingerprints; a missing file is an empty baseline."""
+    if not path.is_file():
+        return set()
+    prints: Set[str] = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        line = line.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        if len(parts) >= 3:
+            prints.add(parts[2])
+    return prints
+
+
+def render_baseline(findings: Iterable[Finding]) -> str:
+    """Serialize findings as a baseline file (``--write-baseline``)."""
+    header = ("# cascade-lint baseline — a ratchet, not a waiver list.\n"
+              "# Lines may only be REMOVED (fix the finding); new code must\n"
+              "# be clean.  Regenerate with:  python -m repro.analysis "
+              "--write-baseline\n")
+    rows = [f"{f.rule} {f.path} {fingerprint(f)}  # {f.message}"
+            for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))]
+    return header + "".join(r + "\n" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+@dataclass
+class AnalysisResult:
+    """Everything one run produced (pre-baseline)."""
+
+    findings: List[Finding]
+    suppressed: int
+    files: int
+
+
+def run_analysis(root: Path, paths: Optional[Sequence[str]] = None,
+                 rules: Optional[Sequence[Rule]] = None) -> AnalysisResult:
+    """Run ``rules`` over ``paths`` under ``root``; suppressions applied.
+
+    ``rules`` defaults to the full registry (``repro.analysis.rules``);
+    ``paths`` defaults to ``src benchmarks examples``.
+    """
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = [cls() for cls in ALL_RULES]
+    paths = list(paths) if paths else list(DEFAULT_PATHS)
+
+    repo = RepoContext(root=root)
+    findings: List[Finding] = []
+    suppressed = 0
+    suppression_maps: Dict[str, Tuple[Set[str], Dict[int, Set[str]]]] = {}
+
+    for f in iter_py_files(root, paths):
+        ctx, err = load_module(root, f)
+        if err is not None:
+            findings.append(err)
+            continue
+        repo.modules.append(ctx)
+        suppression_maps[ctx.rel] = _suppressions(ctx.lines)
+        for rule in rules:
+            findings.extend(rule.check_module(ctx))
+
+    for rule in rules:
+        findings.extend(rule.check_repo(repo))
+
+    kept: List[Finding] = []
+    for fd in findings:
+        maps = suppression_maps.get(fd.path)
+        if maps is None:
+            # repo-rule finding against an unscanned file: look it up
+            target = root / fd.path
+            if target.is_file() and target.suffix == ".py":
+                try:
+                    text = target.read_text(encoding="utf-8").splitlines()
+                    maps = _suppressions(text)
+                    suppression_maps[fd.path] = maps
+                except OSError:
+                    maps = None
+        if maps is not None and _is_suppressed(fd, *maps):
+            suppressed += 1
+            continue
+        kept.append(fd)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return AnalysisResult(findings=kept, suppressed=suppressed,
+                          files=len(repo.modules))

@@ -1,0 +1,23 @@
+"""The cascade-lint rule registry (CAS001–CAS006)."""
+from repro.analysis.rules.determinism import DeterminismRule
+from repro.analysis.rules.docs_contract import DocsContractRule
+from repro.analysis.rules.jit_purity import JitPurityRule
+from repro.analysis.rules.kernel_contract import KernelContractRule
+from repro.analysis.rules.locks import LockDisciplineRule
+from repro.analysis.rules.rng import RngDisciplineRule
+
+#: registration order == report order for equal positions
+ALL_RULES = (
+    RngDisciplineRule,
+    DeterminismRule,
+    JitPurityRule,
+    LockDisciplineRule,
+    KernelContractRule,
+    DocsContractRule,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "RngDisciplineRule", "DeterminismRule", "JitPurityRule",
+    "LockDisciplineRule", "KernelContractRule", "DocsContractRule",
+]

@@ -1,0 +1,146 @@
+"""Shared AST plumbing for the cascade-lint checkers.
+
+The checkers care about *qualified* call targets (``np.random.default_rng``
+must resolve to ``numpy.random.default_rng`` however numpy was imported),
+and about which function a node sits in.  Both are resolved here once so
+individual rules stay declarative.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def import_table(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to fully qualified dotted paths.
+
+    ``import numpy as np``                 -> ``{"np": "numpy"}``
+    ``from jax import random as jr``       -> ``{"jr": "jax.random"}``
+    ``from numpy.random import default_rng`` ->
+    ``{"default_rng": "numpy.random.default_rng"}``
+    """
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                table[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+                if alias.asname:
+                    table[alias.asname] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for alias in node.names:
+                table[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    return table
+
+
+def qualified_name(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Dotted path of a Name/Attribute chain with import aliases resolved.
+
+    Returns None for anything that is not a plain ``a.b.c`` chain
+    (subscripts, call results, ...).
+    """
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = imports.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def call_name(call: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    """Qualified name of a call's target, or None if unresolvable."""
+    return qualified_name(call.func, imports)
+
+
+def walk_with_function_stack(
+        tree: ast.AST) -> Iterator[Tuple[ast.AST, List[FuncNode]]]:
+    """Yield ``(node, enclosing-function-stack)`` pairs, outermost first."""
+    def visit(node: ast.AST, stack: List[FuncNode]):
+        yield node, stack
+        child_stack = stack
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            child_stack = stack + [node]
+        for child in ast.iter_child_nodes(node):
+            yield from visit(child, child_stack)
+    yield from visit(tree, [])
+
+
+def param_names(fn: FuncNode) -> Set[str]:
+    """All parameter names of a def/lambda (incl. *args/**kwargs/kw-only)."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def positional_param_names(fn: ast.FunctionDef) -> List[str]:
+    """Ordered positional (non-kw-only) parameter names, ``self`` dropped."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names
+
+
+def required_positional_names(fn: ast.FunctionDef) -> List[str]:
+    """Positional parameters WITHOUT defaults (the tensor signature —
+    trailing defaulted positionals are config knobs)."""
+    names = positional_param_names(fn)
+    n_defaults = len(fn.args.defaults)
+    return names[:len(names) - n_defaults] if n_defaults else names
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """The base variable of an attribute/subscript chain (``a`` of
+    ``a.b[0].c``), or None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def is_builtin_call(call: ast.Call, name: str,
+                    imports: Dict[str, str]) -> bool:
+    """True when ``call`` targets the builtin ``name`` (not shadowed by an
+    import; local shadowing is rare enough to accept)."""
+    return (isinstance(call.func, ast.Name) and call.func.id == name
+            and name not in imports)
+
+
+def self_attribute(node: ast.AST) -> Optional[str]:
+    """``X`` when ``node`` is exactly ``self.X``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def assigned_self_attrs(stmt: ast.stmt) -> Iterator[ast.Attribute]:
+    """Yield ``self.X`` attribute nodes written by an assignment stmt."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Attribute) and \
+                    self_attribute(node) is not None:
+                yield node
+
+
+def string_value(node: ast.AST) -> Optional[str]:
+    """The value of a string constant node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

@@ -1,0 +1,154 @@
+"""CAS002 — determinism hazards.
+
+The repo's reproducibility rule (learned twice in the seed code, fixed in
+PR 1): anything that feeds a seed, an ordering, or a printed result must
+be a deterministic function of the run configuration.  Python breaks this
+in well-camouflaged ways:
+
+* builtin ``hash()`` on strings is salted per process (PYTHONHASHSEED) —
+  the PR-1 bug: ``default_rng(hash(f"{seed}:{name}"))`` gave every run a
+  different corpus.  Use ``zlib.crc32`` on the encoded string.
+* ``id()`` values change run to run — ordering by them (sort keys) makes
+  output order an allocator artifact.
+* ``time.time()`` / ``os.urandom()`` / ``uuid.uuid4()`` in a seed position
+  makes the seed itself nondeterministic (timing *measurements* are fine).
+* the legacy ``np.random.*`` module-level samplers share one hidden global
+  generator across every caller — unseedable in any composable way.
+* iterating a ``set`` literal/constructor feeds PYTHONHASHSEED-dependent
+  order into whatever consumes the loop (wrap in ``sorted()``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.rules.common import (
+    call_name, import_table, is_builtin_call)
+
+#: legacy global-state samplers of the pre-Generator numpy API
+LEGACY_NP_RANDOM = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "beta", "binomial", "poisson", "standard_normal", "bytes", "get_state",
+    "set_state",
+}
+
+#: wall-clock / entropy sources that must never feed a seed
+NONDET_SOURCES = {
+    "time.time", "time.time_ns", "time.monotonic", "time.perf_counter",
+    "os.urandom", "uuid.uuid4", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "secrets.token_bytes", "secrets.randbits",
+}
+
+#: call targets whose arguments are seed positions
+SEED_SINKS = {
+    "numpy.random.default_rng", "numpy.random.SeedSequence",
+    "numpy.random.RandomState", "numpy.random.seed",
+    "jax.random.PRNGKey", "jax.random.key", "random.seed", "random.Random",
+}
+
+_ORDERING_CALLS = {"sorted", "min", "max"}
+
+
+def _contains_nondet_source(node: ast.AST,
+                            imports: Dict[str, str]) -> Optional[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub, imports)
+            if name in NONDET_SOURCES:
+                return name
+    return None
+
+
+def _contains_id_call(node: ast.AST, imports: Dict[str, str]) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and is_builtin_call(sub, "id", imports):
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "id" and \
+                "id" not in imports:
+            return True
+    return False
+
+
+def _set_expr(node: ast.AST, imports: Dict[str, str]) -> bool:
+    if isinstance(node, ast.Set):
+        return True
+    if isinstance(node, ast.Call):
+        return (is_builtin_call(node, "set", imports)
+                or is_builtin_call(node, "frozenset", imports))
+    return False
+
+
+class DeterminismRule(Rule):
+    """No salted hashes, id() ordering, wall-clock seeds, global numpy
+    RNG, or raw-set iteration order."""
+
+    id = "CAS002"
+    title = "determinism hazards (hash()/id()/time-seeds/np.random.*/sets)"
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Finding]:
+        """Flag the five hazard classes documented in the module docstring."""
+        imports = import_table(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(node, ctx, imports)
+            elif isinstance(node, ast.Assign):
+                yield from self._check_seed_assign(node, ctx, imports)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if _set_expr(it, imports):
+                    line = getattr(node, "lineno", it.lineno)
+                    col = getattr(node, "col_offset", it.col_offset)
+                    yield Finding(
+                        self.id, ctx.rel, line, col,
+                        "iteration over a set is PYTHONHASHSEED-ordered — "
+                        "wrap it in sorted() before it feeds results")
+
+    def _check_call(self, node: ast.Call, ctx: ModuleContext,
+                    imports: Dict[str, str]) -> Iterator[Finding]:
+        if is_builtin_call(node, "hash", imports):
+            yield Finding(
+                self.id, ctx.rel, node.lineno, node.col_offset,
+                "builtin hash() is salted per process (the PR-1 seeding "
+                "bug) — use zlib.crc32(s.encode()) for stable hashing")
+            return
+        name = call_name(node, imports)
+        if name is not None and name.startswith("numpy.random."):
+            tail = name.rsplit(".", 1)[1]
+            if tail in LEGACY_NP_RANDOM:
+                yield Finding(
+                    self.id, ctx.rel, node.lineno, node.col_offset,
+                    f"legacy global-state sampler {name}() — construct a "
+                    "seeded np.random.default_rng(seed) (engines: tick_rngs)")
+                return
+        if name in SEED_SINKS:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                src = _contains_nondet_source(arg, imports)
+                if src is not None:
+                    yield Finding(
+                        self.id, ctx.rel, node.lineno, node.col_offset,
+                        f"{src}() feeds a seed position of {name}() — seeds "
+                        "must be deterministic functions of the run config")
+        if name in _ORDERING_CALLS or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sort"):
+            for kw in node.keywords:
+                if kw.arg == "key" and _contains_id_call(kw.value, imports):
+                    yield Finding(
+                        self.id, ctx.rel, node.lineno, node.col_offset,
+                        "ordering by id() is allocator-dependent — sort by "
+                        "a stable key")
+
+    def _check_seed_assign(self, node: ast.Assign, ctx: ModuleContext,
+                           imports: Dict[str, str]) -> Iterator[Finding]:
+        seedish = any(isinstance(t, ast.Name) and "seed" in t.id.lower()
+                      for t in node.targets)
+        if not seedish:
+            return
+        src = _contains_nondet_source(node.value, imports)
+        if src is not None:
+            yield Finding(
+                self.id, ctx.rel, node.lineno, node.col_offset,
+                f"{src}() assigned to a seed variable — seeds must be "
+                "deterministic functions of the run config")

@@ -1,0 +1,56 @@
+"""CAS006 — docs drift contract (migrated from the CI shell greps).
+
+PR 4 made the README + docs/ a CI-guarded surface with an ad-hoc inline
+python step in the workflow; this rule owns that contract now, so it runs
+locally, supports suppressions/baselining like every other check, and is
+testable:
+
+* ``README.md`` names every ``benchmarks/*.py`` and ``examples/*.py``
+  file (token match — ``throughput.py`` inside ``batched_throughput.py``
+  does not count for a new ``throughput.py``);
+* the documentation surface exists and is linked from the README:
+  ``docs/ARCHITECTURE.md``, ``docs/MODELS.md``, ``docs/ANALYSIS.md``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterator
+
+from repro.analysis.engine import Finding, RepoContext, Rule
+
+REQUIRED_DOCS = ("docs/ARCHITECTURE.md", "docs/MODELS.md",
+                 "docs/ANALYSIS.md")
+NAMED_DIRS = ("benchmarks", "examples")
+
+
+class DocsContractRule(Rule):
+    """README/docs stay in lockstep with the runnable surface."""
+
+    id = "CAS006"
+    title = "docs contract (README names every benchmark/example)"
+
+    def check_repo(self, repo: RepoContext) -> Iterator[Finding]:
+        """Check README coverage and the docs/ surface."""
+        readme_path = repo.root / "README.md"
+        if not readme_path.is_file():
+            if any(m.rel.startswith(NAMED_DIRS) for m in repo.modules):
+                yield Finding(self.id, "README.md", 1, 0,
+                              "README.md is missing")
+            return
+        readme = readme_path.read_text(encoding="utf-8")
+        for d in NAMED_DIRS:
+            base = repo.root / d
+            if not base.is_dir():
+                continue
+            for p in sorted(base.glob("*.py")):
+                if not re.search(r"(?<![\w-])" + re.escape(p.name), readme):
+                    yield Finding(
+                        self.id, f"{d}/{p.name}", 1, 0,
+                        f"README.md does not mention {d}/{p.name} — every "
+                        "benchmark/example must be indexed")
+        for doc in REQUIRED_DOCS:
+            if not (repo.root / doc).is_file():
+                yield Finding(self.id, doc, 1, 0, f"{doc} is missing")
+            elif doc not in readme:
+                yield Finding(self.id, "README.md", 1, 0,
+                              f"README.md does not link {doc}")

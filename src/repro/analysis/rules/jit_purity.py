@@ -1,0 +1,258 @@
+"""CAS003 — jit purity.
+
+Functions staged by ``jax.jit`` / ``shard_map`` / the repo's
+``sharding.jit_*`` factories execute as traced computations: Python side
+effects run once at trace time and silently disappear from later calls,
+host syncs (``.item()``, ``float()`` on a tracer) either throw under jit
+or serialize the device pipeline, and a buffer passed at a
+``donate_argnums`` position is dead the moment the call returns.
+
+Three checks, all within one module (cross-module staging is out of
+static reach and stays the parity suite's job):
+
+1. a jit-reached function must not mutate ``self``/enclosing state
+   (``self.x = ...``, ``global``/``nonlocal``);
+2. it must not call ``.item()`` or ``float()/int()/bool()`` on values
+   rooted at its own parameters (tracers);
+3. after a call to a locally-defined donating jitted callable, the
+   variables passed at donated positions must not be read again before
+   reassignment.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.rules.common import (
+    FuncNode, call_name, import_table, param_names, root_name,
+    self_attribute)
+
+#: call targets that stage their first positional argument
+_STAGING_CALLS = {"jax.jit", "jax.experimental.shard_map.shard_map",
+                  "shard_map"}
+#: repo convention: sharding factories named jit_* stage their first arg
+_STAGING_NAME_RE = re.compile(r"(^|\.)jit_\w+$")
+
+_CAST_BUILTINS = {"float", "int", "bool"}
+
+
+def _is_partial_of_jit(call: ast.Call, imports: Dict[str, str]) -> bool:
+    name = call_name(call, imports)
+    if name not in ("functools.partial", "partial"):
+        return False
+    return bool(call.args) and call_name_or_qual(call.args[0], imports) \
+        in _STAGING_CALLS
+
+
+def call_name_or_qual(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Qualified name of a bare Name/Attribute expression (not a call)."""
+    from repro.analysis.rules.common import qualified_name
+    return qualified_name(node, imports)
+
+
+def _staging_call(call: ast.Call, imports: Dict[str, str]) -> bool:
+    name = call_name(call, imports)
+    if name in _STAGING_CALLS:
+        return True
+    if name is not None and _STAGING_NAME_RE.search(name):
+        return True
+    # functools.partial(jax.jit, ...)(fn) — the outer call stages fn
+    if isinstance(call.func, ast.Call) and \
+            _is_partial_of_jit(call.func, imports):
+        return True
+    return False
+
+
+def _jit_decorated(fn: ast.AST, imports: Dict[str, str]) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if call_name_or_qual(dec, imports) in _STAGING_CALLS:
+            return True
+        if isinstance(dec, ast.Call):
+            if call_name(dec, imports) in _STAGING_CALLS:
+                return True
+            if _is_partial_of_jit(dec, imports):
+                return True
+    return False
+
+
+def _static_params(call: Optional[ast.Call], fn: FuncNode) -> Set[str]:
+    """Parameter names marked static in a jit call/decorator (they are
+    concrete Python values, not tracers — host casts on them are fine)."""
+    if call is None:
+        return set()
+    static: Set[str] = set()
+    ordered = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    static.add(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, int) and \
+                        sub.value < len(ordered):
+                    static.add(ordered[sub.value])
+    # kw-only params of a jitted fn are necessarily static-like configs
+    static.update(p.arg for p in fn.args.kwonlyargs)
+    return static
+
+
+def _donated_positions(call: ast.Call) -> List[int]:
+    """Literal ``donate_argnums`` positions of a jax.jit call, if any."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return [e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)]
+    return []
+
+
+class JitPurityRule(Rule):
+    """Jit-staged functions stay pure; donated buffers die at the call."""
+
+    id = "CAS003"
+    title = "jit purity (no self-mutation / host syncs / donated reads)"
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Finding]:
+        """Resolve the module's jit-reached functions, then check each."""
+        imports = import_table(ctx.tree)
+        defs_by_name: Dict[str, FuncNode] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, node)
+
+        jitted: List[tuple] = []    # (fn node, static param names)
+        donating: Dict[str, List[int]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and _jit_decorated(node, imports):
+                dec_call = next(
+                    (d for d in node.decorator_list
+                     if isinstance(d, ast.Call)), None)
+                jitted.append((node, _static_params(dec_call, node)))
+            if not isinstance(node, ast.Call):
+                continue
+            if _staging_call(node, imports) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    jitted.append((target, _static_params(node, target)))
+                elif isinstance(target, ast.Name) and \
+                        target.id in defs_by_name:
+                    fn = defs_by_name[target.id]
+                    jitted.append((fn, _static_params(node, fn)))
+        # assignments binding a donating jax.jit(...) to a local name
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    call_name(node.value, imports) in _STAGING_CALLS:
+                pos = _donated_positions(node.value)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            donating[t.id] = pos
+
+        seen: Set[int] = set()
+        for fn, static in jitted:
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            yield from self._check_staged(fn, ctx, static)
+        if donating:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield from self._check_donation(node.body, donating, ctx)
+            if isinstance(ctx.tree, ast.Module):
+                yield from self._check_donation(ctx.tree.body, donating, ctx)
+
+    # -- staged-function purity ----------------------------------------
+    def _check_staged(self, fn: FuncNode, ctx: ModuleContext,
+                      static: Set[str]) -> Iterator[Finding]:
+        params = param_names(fn) - static
+        label = getattr(fn, "name", "<lambda>")
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        for sub in ast.walk(t):
+                            attr = self_attribute(sub)
+                            if attr is not None and \
+                                    isinstance(sub.ctx, ast.Store):
+                                yield Finding(
+                                    self.id, ctx.rel, sub.lineno,
+                                    sub.col_offset,
+                                    f"jit-staged {label}() mutates "
+                                    f"self.{attr} — the write happens once "
+                                    "at trace time, not per call")
+                elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                    kind = "global" if isinstance(node, ast.Global) \
+                        else "nonlocal"
+                    yield Finding(
+                        self.id, ctx.rel, node.lineno, node.col_offset,
+                        f"jit-staged {label}() rebinds {kind} "
+                        f"{', '.join(node.names)} — trace-time side effect")
+                elif isinstance(node, ast.Call):
+                    if isinstance(node.func, ast.Attribute) and \
+                            node.func.attr == "item" and not node.args:
+                        yield Finding(
+                            self.id, ctx.rel, node.lineno, node.col_offset,
+                            f"jit-staged {label}() calls .item() — host "
+                            "sync on a tracer")
+                    elif isinstance(node.func, ast.Name) and \
+                            node.func.id in _CAST_BUILTINS and \
+                            len(node.args) == 1 and \
+                            root_name(node.args[0]) in params:
+                        yield Finding(
+                            self.id, ctx.rel, node.lineno, node.col_offset,
+                            f"jit-staged {label}() calls "
+                            f"{node.func.id}() on tracer argument "
+                            f"'{root_name(node.args[0])}' — host sync")
+
+    # -- donated-buffer reads --------------------------------------------
+    def _check_donation(self, body: Sequence[ast.stmt],
+                        donating: Dict[str, List[int]],
+                        ctx: ModuleContext) -> Iterator[Finding]:
+        dead: Dict[str, str] = {}   # var -> jitted callee that consumed it
+        for stmt in body:
+            # reads first (the donating call's own args are not yet dead)
+            if dead:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Name) and \
+                            isinstance(node.ctx, ast.Load) and \
+                            node.id in dead:
+                        yield Finding(
+                            self.id, ctx.rel, node.lineno, node.col_offset,
+                            f"read of '{node.id}' after it was donated to "
+                            f"{dead[node.id]}(...) — donated buffers are "
+                            "invalidated by the call")
+                        dead.pop(node.id, None)
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in donating:
+                    for pos in donating[node.func.id]:
+                        if pos < len(node.args) and \
+                                isinstance(node.args[pos], ast.Name):
+                            dead[node.args[pos].id] = node.func.id
+            # reassignment revives the name
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name):
+                            dead.pop(sub.id, None)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                for sub in ast.walk(stmt.target):
+                    if isinstance(sub, ast.Name):
+                        dead.pop(sub.id, None)

@@ -1,0 +1,167 @@
+"""CAS005 — the §8 kernel/level contract, machine-checked.
+
+docs/ARCHITECTURE.md §8 and docs/MODELS.md promise, for every Pallas
+kernel package ``src/repro/kernels/<name>/``:
+
+* ``kernel.py``'s public entry points are consumed by ``ops.py`` (the
+  jitted public wrapper that pads shapes and picks interpret mode);
+* every public op in ``ops.py`` has a **signature-matching** pure-jnp
+  twin in ``ref.py`` (same ordered positional parameters — the parity
+  tests call both with the same tensors);
+* every public op is exported through the package ``__init__.__all__``.
+
+And for the cascade's level zoo: every ``LevelSpec(kind=...)`` string
+constructed anywhere in ``src/repro`` must have an analytic FLOP model
+in ``metrics/costs.py`` (``<kind>_flops`` or ``<kind>_student_flops``) —
+the deferral penalties c_i are only honest if each level's cost is
+derived, not guessed.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.analysis.engine import Finding, RepoContext, Rule
+from repro.analysis.rules.common import required_positional_names, string_value
+
+KERNELS_DIR = "src/repro/kernels"
+COSTS_PATH = "src/repro/metrics/costs.py"
+
+#: level kinds costed under another kind's FLOP model on purpose
+KIND_ALIASES = {"tinytf_large": "tinytf"}
+
+
+def _parse(path: Path) -> Optional[ast.Module]:
+    try:
+        return ast.parse(path.read_text(encoding="utf-8"), str(path))
+    except (OSError, SyntaxError):
+        return None
+
+
+def _public_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")}
+
+
+def _all_exports(tree: ast.Module) -> Optional[Set[str]]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    vals = {string_value(e)
+                            for e in getattr(node.value, "elts", [])}
+                    return {v for v in vals if v}
+    return None
+
+
+def _names_used(tree: ast.Module) -> Set[str]:
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                used.add(alias.asname or alias.name.split(".")[-1])
+    return used
+
+
+class KernelContractRule(Rule):
+    """kernel.py/ref.py/ops.py/__init__ stay a closed, parity-testable
+    contract, and every level kind keeps a FLOP model."""
+
+    id = "CAS005"
+    title = "kernel/level contract (ops twins, __all__, FLOP models)"
+
+    def check_repo(self, repo: RepoContext) -> Iterator[Finding]:
+        """Structural sweep over kernels/ + the LevelSpec-kind cost map."""
+        yield from self._check_kernels(repo.root)
+        yield from self._check_level_kinds(repo)
+
+    # -- kernels/<name>/ packages -----------------------------------------
+    def _check_kernels(self, root: Path) -> Iterator[Finding]:
+        kdir = root / KERNELS_DIR
+        if not kdir.is_dir():
+            return
+        for pkg in sorted(p for p in kdir.iterdir() if p.is_dir()):
+            kernel_py = pkg / "kernel.py"
+            if not kernel_py.is_file():
+                continue
+            rel = f"{KERNELS_DIR}/{pkg.name}"
+            ktree = _parse(kernel_py)
+            ops_py, ref_py, init_py = (pkg / "ops.py", pkg / "ref.py",
+                                       pkg / "__init__.py")
+            for req in (ops_py, ref_py, init_py):
+                if not req.is_file():
+                    yield Finding(self.id, f"{rel}/kernel.py", 1, 0,
+                                  f"kernel package is missing {req.name} "
+                                  "(§8 contract: kernel/ref/ops triple)")
+            otree = _parse(ops_py) if ops_py.is_file() else None
+            rtree = _parse(ref_py) if ref_py.is_file() else None
+            itree = _parse(init_py) if init_py.is_file() else None
+            if ktree is not None and otree is not None:
+                used = _names_used(otree)
+                for name, node in _public_defs(ktree).items():
+                    if name not in used:
+                        yield Finding(
+                            self.id, f"{rel}/kernel.py", node.lineno, 0,
+                            f"public kernel entry {name}() is not consumed "
+                            "by ops.py — dead kernel or missing wrapper")
+            if otree is None:
+                continue
+            ref_defs = _public_defs(rtree) if rtree is not None else {}
+            ref_sigs = {tuple(required_positional_names(fn)): n
+                        for n, fn in ref_defs.items()}
+            exports = _all_exports(itree) if itree is not None else None
+            for name, node in _public_defs(otree).items():
+                sig = tuple(required_positional_names(node))
+                if rtree is not None and sig not in ref_sigs:
+                    yield Finding(
+                        self.id, f"{rel}/ops.py", node.lineno, 0,
+                        f"public op {name}({', '.join(sig)}) has no "
+                        "signature-matching ref.py twin — the parity "
+                        "tests need a pure-jnp oracle with the same "
+                        "positional parameters")
+                if exports is not None and name not in exports:
+                    yield Finding(
+                        self.id, f"{rel}/ops.py", node.lineno, 0,
+                        f"public op {name}() is not exported in "
+                        "__init__.__all__")
+
+    # -- LevelSpec kinds vs metrics/costs.py -------------------------------
+    def _check_level_kinds(self, repo: RepoContext) -> Iterator[Finding]:
+        costs_path = repo.root / COSTS_PATH
+        ctree = _parse(costs_path)
+        if ctree is None:
+            return      # no cost model in this tree (fixture repos)
+        cost_fns = set(_public_defs(ctree))
+        kinds: List = []       # (kind, rel, lineno)
+        for mod in repo.modules:
+            if not mod.rel.startswith("src/repro/"):
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = node.func.attr if isinstance(node.func, ast.Attribute) \
+                    else getattr(node.func, "id", "")
+                if fname != "LevelSpec":
+                    continue
+                for kw in node.keywords:
+                    if kw.arg == "kind":
+                        kind = string_value(kw.value)
+                        if kind:
+                            kinds.append((kind, mod.rel, node.lineno))
+        seen: Set[str] = set()
+        for kind, rel, lineno in kinds:
+            if kind in seen:
+                continue
+            seen.add(kind)
+            base = KIND_ALIASES.get(kind, kind)
+            if f"{base}_flops" not in cost_fns and \
+                    f"{base}_student_flops" not in cost_fns:
+                yield Finding(
+                    self.id, rel, lineno, 0,
+                    f"LevelSpec kind '{kind}' has no FLOP model in "
+                    f"metrics/costs.py (expected {base}_flops or "
+                    f"{base}_student_flops) — deferral penalties must be "
+                    "derived from analytic costs")

@@ -1,0 +1,105 @@
+"""CAS004 — lock discipline (a static race detector for the expert pool).
+
+``core/experts.py`` shares mutable state between the engine thread and W
+pool workers (PR 5).  The convention machine-checked here: an attribute
+whose initializing assignment carries a ``# guarded-by: <lock>`` comment
+
+    self._shards = ...   # guarded-by: _lock
+
+may only be touched inside a ``with self.<lock>:`` block, in every method
+of the class except the constructor family (``__init__``,
+``__post_init__``, ``__del__`` — no concurrent aliases can exist yet/
+anymore).  The lock itself must be created in the constructor.  This
+catches the classic pool bug — a new method reading ``self._shards``
+bare while a worker resolves a shard — at lint time instead of as a
+once-a-month flaky parity failure.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Set
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.rules.common import self_attribute
+
+_GUARD_RE = re.compile(r"#\s*guarded-by:\s*(\w+)")
+
+#: methods where the object is not yet / no longer shared
+_EXEMPT_METHODS = {"__init__", "__post_init__", "__del__", "__new__"}
+
+
+def _guard_comment(lines: List[str], lineno: int) -> str:
+    """The lock name annotated on a 1-based source line, or ''."""
+    if 1 <= lineno <= len(lines):
+        m = _GUARD_RE.search(lines[lineno - 1])
+        if m:
+            return m.group(1)
+    return ""
+
+
+class LockDisciplineRule(Rule):
+    """``# guarded-by:`` attributes only under ``with self.<lock>:``."""
+
+    id = "CAS004"
+    title = "lock discipline (guarded-by annotations)"
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Finding]:
+        """Check every class that declares guarded attributes."""
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(node, ctx)
+
+    def _check_class(self, cls: ast.ClassDef,
+                     ctx: ModuleContext) -> Iterator[Finding]:
+        guarded: Dict[str, str] = {}    # attr -> lock attr
+        for node in ast.walk(cls):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                lock = _guard_comment(ctx.lines, node.lineno)
+                if not lock:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    attr = self_attribute(t)
+                    if attr is None and isinstance(t, ast.Name):
+                        attr = t.id      # class-level declaration
+                    if attr is not None:
+                        guarded[attr] = lock
+        if not guarded:
+            return
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name not in _EXEMPT_METHODS:
+                yield from self._check_method(stmt, guarded, ctx, cls.name)
+
+    def _check_method(self, method: ast.FunctionDef,
+                      guarded: Dict[str, str], ctx: ModuleContext,
+                      cls_name: str) -> Iterator[Finding]:
+        locks = set(guarded.values())
+
+        # exhaustive walker tracking which guard locks are held lexically
+        def walk(node: ast.AST, held: Set[str]) -> Iterator[Finding]:
+            if isinstance(node, ast.With):
+                inner = set(held)
+                for item in node.items:
+                    a = self_attribute(item.context_expr)
+                    if a in locks:
+                        inner.add(a)
+                for item in node.items:
+                    yield from walk(item, held)
+                for child in node.body:
+                    yield from walk(child, inner)
+                return
+            a = self_attribute(node)
+            if a is not None and a in guarded and guarded[a] not in held:
+                yield Finding(
+                    self.id, ctx.rel, node.lineno, node.col_offset,
+                    f"{cls_name}.{method.name} touches self.{a} outside "
+                    f"'with self.{guarded[a]}:' (declared guarded-by "
+                    f"{guarded[a]})")
+            for child in ast.iter_child_nodes(node):
+                yield from walk(child, held)
+
+        for stmt in method.body:
+            yield from walk(stmt, set())

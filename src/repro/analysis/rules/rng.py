@@ -1,0 +1,101 @@
+"""CAS001 — RNG discipline.
+
+The bitwise parity story of every engine (batched, sharded, async,
+pipelined, per-lane) rests on the pre-split per-tick RNG rule of
+``core/rng.py``: all Algorithm-1 randomness flows through
+``tick_rngs``/``sample_cache_indices``, derived from
+``SeedSequence((seed, stream_id, t))``.  A single ad-hoc generator inside
+an engine silently desyncs the reference and the batched path.
+
+Enforced here:
+
+* **Everywhere scanned** — RNG-source construction with no seed argument
+  (``np.random.default_rng()``, ``random.Random()``) is nondeterministic
+  by definition: flagged.
+* **``src/repro/core/``** — even *seeded* construction is confined to
+  whitelisted modules (``rng.py`` is the discipline itself;
+  ``distill.py`` is the offline baseline) and to init/offline-training
+  contexts (``__init__``/``__post_init__``/``reset``/``train_*``/
+  ``*_init``), where randomness is consumed before the stream starts.
+  Anything reachable per tick must take its generators from
+  ``tick_rngs``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.rules.common import (
+    FuncNode, call_name, import_table, walk_with_function_stack)
+
+RNG_CONSTRUCTORS = {
+    "numpy.random.default_rng",
+    "numpy.random.Generator",
+    "numpy.random.RandomState",
+    "numpy.random.SeedSequence",
+    "jax.random.PRNGKey",
+    "jax.random.key",
+    "random.Random",
+    "random.SystemRandom",
+}
+
+#: modules whose *job* is constructing generators (seeded) in core/
+CORE_WHITELIST = {
+    "src/repro/core/rng.py",       # the tick-RNG discipline itself
+    "src/repro/core/distill.py",   # offline distillation baseline
+}
+
+CORE_PREFIX = "src/repro/core/"
+
+#: function contexts where seeded construction is pre-stream, not per-tick
+_ALLOWED_FUNCS = {"__init__", "__post_init__", "reset"}
+_ALLOWED_PREFIXES = ("train_",)
+_ALLOWED_SUFFIXES = ("_init",)
+
+
+def _allowed_context(stack: List[FuncNode]) -> bool:
+    for fn in stack:
+        name = getattr(fn, "name", None)
+        if name is None:
+            continue
+        if name in _ALLOWED_FUNCS:
+            return True
+        if name.startswith(_ALLOWED_PREFIXES) or \
+                name.endswith(_ALLOWED_SUFFIXES):
+            return True
+    return False
+
+
+class RngDisciplineRule(Rule):
+    """All engine randomness flows through ``core/rng.py`` tick keys."""
+
+    id = "CAS001"
+    title = "RNG discipline (tick_rngs / sample_cache_indices)"
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Finding]:
+        """Flag unseeded RNG construction, and any construction on the
+        per-tick paths of ``src/repro/core/``."""
+        imports = import_table(ctx.tree)
+        in_core = (ctx.rel.startswith(CORE_PREFIX)
+                   and ctx.rel not in CORE_WHITELIST)
+        for node, stack in walk_with_function_stack(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node, imports)
+            if name not in RNG_CONSTRUCTORS:
+                continue
+            if not node.args and not node.keywords:
+                yield Finding(
+                    self.id, ctx.rel, node.lineno, node.col_offset,
+                    f"unseeded RNG construction {name}() — every generator "
+                    "must derive from an explicit seed (core engines: from "
+                    "core.rng.tick_rngs)")
+            elif in_core and not _allowed_context(stack):
+                yield Finding(
+                    self.id, ctx.rel, node.lineno, node.col_offset,
+                    f"direct {name}(...) on a core/ serving path — per-tick "
+                    "randomness must flow through core.rng.tick_rngs / "
+                    "sample_cache_indices (whitelist: core/rng.py, "
+                    "core/distill.py; init/offline-training contexts are "
+                    "exempt)")

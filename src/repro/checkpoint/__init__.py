@@ -1,3 +1,4 @@
+"""Checkpoint save/restore for zoo model params and train state."""
 from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
 
 __all__ = ["save_checkpoint", "restore_checkpoint"]

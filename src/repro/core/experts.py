@@ -41,6 +41,7 @@ functions of (k, workers) for the model expert.
 """
 from __future__ import annotations
 
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple, Union
@@ -84,18 +85,26 @@ class ExpertTicket:
     ``item_done``/``ready_mask``, and ``result_slice`` blocks on exactly
     the shards overlapping the requested range — the primitive the
     engine's per-lane commit drain is built on.
+
+    Thread safety: the shard table is mutated in place as shards resolve
+    (``_resolve`` swaps a future for its labels, ``_settle_bounds`` fills
+    a legacy shard's unknown upper bound), and tickets may be probed
+    while pool workers are completing those futures — so every shard
+    access goes through ``self._lock`` (re-entrant: the per-item surface
+    calls the internals).  cascade-lint CAS004 enforces the enclosure.
     """
 
-    __slots__ = ("_shards",)
+    __slots__ = ("_shards", "_lock")
 
     def __init__(self, labels: Optional[np.ndarray] = None, future=None,
                  shards: Optional[Sequence] = None):
         if sum(x is not None for x in (labels, future, shards)) != 1:
             raise ValueError(
                 "exactly one of labels/future/shards required")
+        self._lock = threading.RLock()
         if labels is not None:
             labels = np.asarray(labels, np.int32)
-            self._shards = [[0, len(labels), labels]]
+            self._shards = [[0, len(labels), labels]]  # guarded-by: _lock
         elif future is not None:
             # length unknown until resolution (legacy single-future form)
             self._shards = [[0, None, future]]
@@ -123,14 +132,15 @@ class ExpertTicket:
             self._resolve(shard)
 
     def _n_items(self) -> int:
-        last = self._shards[-1] if self._shards else None
-        if last is None:
-            return 0
-        self._settle_bounds(last)
-        if last[1] is None:
-            raise ValueError("ticket length unknown while its legacy "
-                             "future-form shard is still in flight")
-        return int(last[1])
+        with self._lock:
+            last = self._shards[-1] if self._shards else None
+            if last is None:
+                return 0
+            self._settle_bounds(last)
+            if last[1] is None:
+                raise ValueError("ticket length unknown while its legacy "
+                                 "future-form shard is still in flight")
+            return int(last[1])
 
     # -- whole-ticket interface (the PR-3 per-tick commit path) ---------
     def done(self) -> bool:
@@ -140,13 +150,15 @@ class ExpertTicket:
         (``_SimulatedAnnotation`` credits) drain uniformly — one credit
         per shard per whole-ticket poll, the same rate ``ready_mask``
         consumes them."""
-        return all([self._shard_done(s) for s in self._shards])
+        with self._lock:
+            return all([self._shard_done(s) for s in self._shards])
 
     def result(self) -> np.ndarray:
         """Block until every shard resolves; return all labels in order."""
-        if not self._shards:
-            return np.zeros((0,), np.int32)
-        return np.concatenate([self._resolve(s) for s in self._shards])
+        with self._lock:
+            if not self._shards:
+                return np.zeros((0,), np.int32)
+            return np.concatenate([self._resolve(s) for s in self._shards])
 
     # -- per-item interface (the per-lane commit path) ------------------
     def item_done(self, i: int) -> bool:
@@ -155,35 +167,38 @@ class ExpertTicket:
         Raises IndexError for out-of-range ``i``; while a legacy
         future-form shard is still in flight its length is unknown, so
         indices past its start conservatively report not-done."""
-        for shard in self._shards:
-            self._settle_bounds(shard)
-            lo, hi = shard[0], shard[1]
-            if lo <= i and (hi is None or i < hi):
-                return self._shard_done(shard)
+        with self._lock:
+            for shard in self._shards:
+                self._settle_bounds(shard)
+                lo, hi = shard[0], shard[1]
+                if lo <= i and (hi is None or i < hi):
+                    return self._shard_done(shard)
         raise IndexError(i)
 
     def ready_mask(self) -> np.ndarray:
         """(n,) bool — which items are resolvable without blocking."""
-        for shard in self._shards:
-            self._settle_bounds(shard)
-        mask = np.zeros(self._n_items(), bool)
-        for shard in self._shards:
-            mask[shard[0]:shard[1]] = self._shard_done(shard)
-        return mask
+        with self._lock:
+            for shard in self._shards:
+                self._settle_bounds(shard)
+            mask = np.zeros(self._n_items(), bool)
+            for shard in self._shards:
+                mask[shard[0]:shard[1]] = self._shard_done(shard)
+            return mask
 
     def result_slice(self, lo: int, hi: int) -> np.ndarray:
         """Labels for items ``[lo, hi)``, blocking only on the shards
         that overlap the range (other shards stay in flight)."""
         parts = []
-        for s in self._shards:
-            s_lo, s_hi = s[0], s[1]
-            if s_hi is not None and (s_hi <= lo or s_lo >= hi):
-                continue
-            labels = self._resolve(s)
-            s_hi = s[1]
-            if s_hi <= lo or s_lo >= hi:
-                continue
-            parts.append(labels[max(lo - s_lo, 0):hi - s_lo])
+        with self._lock:
+            for s in self._shards:
+                s_lo, s_hi = s[0], s[1]
+                if s_hi is not None and (s_hi <= lo or s_lo >= hi):
+                    continue
+                labels = self._resolve(s)
+                s_hi = s[1]
+                if s_hi <= lo or s_lo >= hi:
+                    continue
+                parts.append(labels[max(lo - s_lo, 0):hi - s_lo])
         if not parts:
             return np.zeros((0,), np.int32)
         return np.concatenate(parts)
@@ -274,7 +289,8 @@ class SimulatedExpert:
         self.workers = max(int(workers), 1)
         self.latency = latency
         self._labels = stream.expert_labels(name)
-        self._submit_seq = 0
+        self._lock = threading.RLock()
+        self._submit_seq = 0   # guarded-by: _lock
 
     def label(self, idx: int, doc: np.ndarray) -> int:
         """Annotate one stream item (table lookup)."""
@@ -296,8 +312,9 @@ class SimulatedExpert:
 
     def _make_ticket(self, idxs, docs, nshards: int) -> ExpertTicket:
         idx_arr = np.asarray(idxs, np.int64)
-        seq = self._submit_seq
-        self._submit_seq += 1
+        with self._lock:
+            seq = self._submit_seq
+            self._submit_seq += 1
         shards = []
         for j, (lo, hi) in enumerate(shard_bounds(len(idx_arr), nshards)):
             sel = idx_arr[lo:hi]
@@ -341,12 +358,15 @@ class ModelExpert:
     name: str = "model-expert"
     cost: float = 1.0e6
     workers: int = 1
-    _executor: Optional[ThreadPoolExecutor] = field(
+    _executor: Optional[ThreadPoolExecutor] = field(     # guarded-by: _lock
+        default=None, init=False, repr=False, compare=False)
+    _lock: threading.RLock = field(
         default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         spec = self.spec
         self.workers = max(int(self.workers), 1)
+        self._lock = threading.RLock()
         self._predict = jax.jit(
             lambda p, ids: tinytf_predict(p, ids, spec))
 
@@ -370,10 +390,11 @@ class ModelExpert:
     #    student compute (jitted dispatch releases the GIL while the
     #    device executes; shard layout is deterministic — shard_bounds)
     def _pool(self) -> ThreadPoolExecutor:
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(
-                max_workers=self.workers, thread_name_prefix=self.name)
-        return self._executor
+        with self._lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self.workers, thread_name_prefix=self.name)
+            return self._executor
 
     def submit(self, idxs, docs) -> ExpertTicket:
         """Enqueue a batch annotation as ONE pool request (kept for the
@@ -407,9 +428,10 @@ class ModelExpert:
     def close(self) -> None:
         """Reap the pool threads (long-lived processes that cycle
         through many experts should call this; idempotent)."""
-        if self._executor is not None:
-            self._executor.shutdown(wait=True)
-            self._executor = None
+        with self._lock:
+            if self._executor is not None:
+                self._executor.shutdown(wait=True)
+                self._executor = None
 
     def __del__(self):  # best-effort: don't leak the workers at GC
         try:

@@ -1,3 +1,4 @@
+"""Simulated benchmark streams and hashing featurizers."""
 from repro.data.features import hash_bow, hash_ids
 from repro.data.streams import (
     BENCHMARKS, Stream, StreamSpec, benchmark_spec, make_stream)

@@ -32,6 +32,8 @@ _KEYWORDS_PER_CLASS = 40
 
 @dataclass(frozen=True)
 class StreamSpec:
+    """Generator recipe for one benchmark stream (Table-1 statistics)."""
+
     name: str
     n_samples: int
     n_classes: int
@@ -75,11 +77,14 @@ BENCHMARKS: Dict[str, StreamSpec] = {
 
 
 def benchmark_spec(name: str) -> StreamSpec:
+    """The committed :data:`BENCHMARKS` spec for dataset ``name``."""
     return BENCHMARKS[name]
 
 
 @dataclass
 class Stream:
+    """A generated document stream plus its cached expert annotations."""
+
     spec: StreamSpec
     docs: List[np.ndarray]
     labels: np.ndarray            # ground truth

@@ -1,3 +1,4 @@
+"""Analytic FLOP cost models and the v5e roofline calculator."""
 from repro.metrics.costs import (
     CostModel, expert_decode_flops, expert_prefill_flops, lr_flops,
     relative_costs, tinytf_flops)

@@ -16,11 +16,13 @@ from repro.models.students import LRSpec, MLPSpec, TinyTFSpec
 
 
 def lr_flops(spec: LRSpec, train: bool = False) -> float:
+    """Analytic FLOPs of one logistic-regression forward (per item)."""
     f = 2.0 * spec.n_features * spec.n_classes
     return 2.0 * f if train else f     # paper C.1: training ~ 2x inference
 
 
 def mlp_flops(spec: MLPSpec, train: bool = False) -> float:
+    """Analytic FLOPs of one deep-MLP student forward (per item)."""
     h, nl = spec.hidden, spec.n_layers
     f = 2.0 * (spec.n_features * h + (nl - 1) * h * h
                + h * spec.n_classes)
@@ -28,6 +30,7 @@ def mlp_flops(spec: MLPSpec, train: bool = False) -> float:
 
 
 def tinytf_flops(spec: TinyTFSpec, train: bool = False) -> float:
+    """Analytic FLOPs of one dense tiny-transformer forward (per item)."""
     L, d, f = spec.max_len, spec.d_model, spec.d_ff
     per_layer = (8.0 * L * d * d          # qkvo projections
                  + 4.0 * L * L * d        # scores + AV
@@ -98,6 +101,7 @@ def expert_prefill_flops(cfg: ModelConfig, length: int) -> float:
 
 
 def expert_decode_flops(cfg: ModelConfig, cache_len: int) -> float:
+    """Per-token decode cost of the expert at KV-cache length ``cache_len``."""
     a = cfg.attn
     dense = 2.0 * cfg.active_param_count()
     if a is None:
@@ -112,6 +116,7 @@ class CostModel:
     units: Dict[str, float]
 
     def cost(self, level_name: str) -> float:
+        """The deferral penalty c_i of ``level_name`` in LR units."""
         return self.units[level_name]
 
 

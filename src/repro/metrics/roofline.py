@@ -24,6 +24,8 @@ from repro.configs.base import ModelConfig
 
 @dataclass(frozen=True)
 class HW:
+    """Per-chip hardware envelope used by the roofline terms."""
+
     name: str
     peak_flops: float      # bf16 FLOP/s per chip
     hbm_bw: float          # bytes/s per chip

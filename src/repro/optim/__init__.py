@@ -1,3 +1,4 @@
+"""In-repo first-order optimizers (pytree-based, jit-friendly)."""
 from repro.optim.optimizers import (
     Optimizer, adam, adamw, clip_by_global_norm, momentum, ogd_sqrt_t,
     sgd)

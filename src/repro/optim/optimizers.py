@@ -23,6 +23,8 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class Optimizer:
+    """A first-order optimizer as an (init, step[, step_k]) triple."""
+
     init: Callable[[Any], Any]
     step: Callable[[Any, Any, Any], tuple]
     name: str = "opt"
@@ -38,6 +40,9 @@ class Optimizer:
 
 
 def clip_by_global_norm(grads, max_norm: float):
+    """Scale ``grads`` so their global l2 norm is at most ``max_norm``.
+
+    Returns ``(clipped_grads, pre_clip_norm)``."""
     norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                         for g in jax.tree.leaves(grads)))
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
@@ -52,6 +57,7 @@ def _apply(params, updates):
 
 
 def sgd(lr: float, clip: Optional[float] = None) -> Optimizer:
+    """Plain SGD (optional global-norm clip); exact ``step_k``."""
     def init(params):
         return {"count": jnp.zeros((), jnp.int32)}
 
@@ -74,6 +80,7 @@ def sgd(lr: float, clip: Optional[float] = None) -> Optimizer:
 
 def momentum(lr: float, beta: float = 0.9,
              clip: Optional[float] = None) -> Optimizer:
+    """Heavy-ball momentum; ``step_k`` is the exact k-fold composition."""
     def init(params):
         return {"count": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
@@ -184,12 +191,14 @@ def _adam_like(lr, b1, b2, eps, weight_decay, clip, state_dtype, name):
 def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
          clip: Optional[float] = None,
          state_dtype: str = "float32") -> Optimizer:
+    """Adam (no weight decay); ``step_k`` composes EMAs exactly."""
     return _adam_like(lr, b1, b2, eps, 0.0, clip, state_dtype, "adam")
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.1, clip: Optional[float] = 1.0,
           state_dtype: str = "float32") -> Optimizer:
+    """AdamW (decoupled weight decay); ``step_k`` composes EMAs exactly."""
     return _adam_like(lr, b1, b2, eps, weight_decay, clip, state_dtype,
                       "adamw")
 

@@ -31,16 +31,19 @@ SEQ_PARALLEL = False
 
 
 def set_seq_parallel(v: bool) -> None:
+    """Toggle the Megatron-SP activation-sharding pattern globally."""
     global SEQ_PARALLEL
     SEQ_PARALLEL = v
 
 
 def set_mesh(mesh: Optional[Mesh]) -> None:
+    """Install ``mesh`` as the process-wide default device mesh."""
     global _CURRENT_MESH
     _CURRENT_MESH = mesh
 
 
 def get_mesh() -> Optional[Mesh]:
+    """The process-wide default device mesh, if one is installed."""
     return _CURRENT_MESH
 
 
@@ -75,10 +78,12 @@ def lane_spec(mesh: Mesh) -> P:
 
 
 def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing dim 0 on the lane ('pod','data') axes."""
     return NamedSharding(mesh, lane_spec(mesh))
 
 
 def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding replicating a value on every device of ``mesh``."""
     return NamedSharding(mesh, P())
 
 
@@ -269,6 +274,7 @@ def _path_str(path) -> str:
 
 def spec_for_path(path_str: str, ndim: int, stacked: bool,
                   moe_mode: str = "tensor") -> P:
+    """PartitionSpec for a parameter path via the placement rule table."""
     rules = list(_RULES)
     if moe_mode == "expert":
         rules = _EXPERT_MODE_RULES + rules
@@ -295,9 +301,11 @@ def param_pspecs(params, moe_mode: str = "tensor"):
 
 
 def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    """Bind one PartitionSpec to ``mesh`` as a NamedSharding."""
     return NamedSharding(mesh, spec)
 
 
 def tree_named_shardings(mesh: Mesh, spec_tree):
+    """Map a PartitionSpec tree to NamedShardings on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
