@@ -4,6 +4,12 @@ Exit codes: 0 clean (or informational run), 1 new findings under
 ``--strict``, 2 bad invocation.  Findings already in the committed
 baseline (``analysis-baseline.txt`` at the repo root) are reported but
 never fail the run — the baseline is a ratchet that may only shrink.
+
+Output formats (``--format``): ``text`` (the default
+``path:line:col: RULE message`` lines), ``json`` (a machine-readable
+array, also reachable via the legacy ``--json`` flag), and ``github``
+(GitHub Actions ``::error file=...,line=...::`` workflow commands — the
+CI analysis job uses it so findings annotate the PR diff inline).
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ from repro.analysis.engine import (
     DEFAULT_PATHS, Finding, fingerprint, load_baseline, render_baseline,
     run_analysis)
 from repro.analysis.rules import ALL_RULES
+
+FORMATS = ("text", "json", "github")
 
 
 def find_repo_root(start: Optional[Path] = None) -> Path:
@@ -32,7 +40,7 @@ def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="cascade-lint: repo-specific static analysis "
-                    "(CAS001-CAS006; see docs/ANALYSIS.md)")
+                    "(CAS001-CAS008; see docs/ANALYSIS.md)")
     ap.add_argument("paths", nargs="*",
                     help=f"files/dirs to scan (default: "
                          f"{' '.join(DEFAULT_PATHS)})")
@@ -46,17 +54,53 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--write-baseline", action="store_true",
                     help="rewrite the baseline from the current findings "
                          "and exit 0")
+    ap.add_argument("--format", choices=FORMATS, default=None,
+                    help="output format (default: text; 'github' emits "
+                         "::error workflow-command annotations)")
     ap.add_argument("--json", action="store_true",
-                    help="emit findings as a JSON array")
+                    help="emit findings as a JSON array "
+                         "(alias of --format json)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the checker catalog and exit")
     return ap
 
 
+def _render_json(findings: List[Finding]) -> str:
+    """The machine-readable array (--format json / legacy --json)."""
+    return json.dumps([f.__dict__ for f in findings], indent=2)
+
+
+def _render_github(f: Finding, baselined: bool = False) -> str:
+    """One GitHub Actions workflow-command annotation per finding.
+
+    Reuses the JSON path's field set (rule/path/line/col/message/
+    severity); baselined findings annotate as notices so they are
+    visible without failing review attention.
+    """
+    level = "notice" if baselined else \
+        ("warning" if f.severity == "warning" else "error")
+    title = f.rule + (" [baselined]" if baselined else "")
+    # workflow-command property values cannot contain raw newlines/commas
+    # in properties; the message part only escapes newlines and percents
+    msg = (f.message.replace("%", "%25").replace("\r", "%0D")
+           .replace("\n", "%0A"))
+    return (f"::{level} file={f.path},line={f.line},"
+            f"col={f.col + 1},title={title}::{msg}")
+
+
 def _emit(findings: List[Finding], baselined: List[Finding],
-          as_json: bool, suppressed: int, files: int) -> None:
-    if as_json:
-        print(json.dumps([f.__dict__ for f in findings], indent=2))
+          fmt: str, suppressed: int, files: int) -> None:
+    if fmt == "json":
+        print(_render_json(findings))
+        return
+    if fmt == "github":
+        for f in findings:
+            print(_render_github(f))
+        for f in baselined:
+            print(_render_github(f, baselined=True))
+        print(f"cascade-lint: {len(findings)} finding(s), "
+              f"{len(baselined)} baselined, {suppressed} suppressed, "
+              f"{files} file(s) scanned")
         return
     for f in findings:
         print(f.render())
@@ -74,6 +118,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for cls in ALL_RULES:
             print(f"{cls.id}  {cls.title}")
         return 0
+    fmt = args.format or ("json" if args.json else "text")
     root = (args.root or find_repo_root()).resolve()
     if not root.is_dir():
         print(f"error: root {root} is not a directory", file=sys.stderr)
@@ -91,7 +136,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     known = load_baseline(baseline_path)
     fresh = [f for f in result.findings if fingerprint(f) not in known]
     old = [f for f in result.findings if fingerprint(f) in known]
-    _emit(fresh, old, args.json, result.suppressed, result.files)
+    _emit(fresh, old, fmt, result.suppressed, result.files)
     if args.strict and fresh:
         return 1
     return 0

@@ -6,12 +6,17 @@ structural contracts).  Everything repo-specific lives in
 ``repro.analysis.rules``; this module only knows how to walk files, parse
 them, apply suppressions, and diff findings against a committed baseline.
 
-Suppression syntax (checked per physical line)::
+Suppression syntax (checked per physical line).  Every suppression must
+carry a trailing justification — free text after the rule ids saying WHY
+the waiver is sound; a bare ``disable=CASxxx`` still suppresses but is
+itself reported as a CAS000 finding (non-suppressible), so it fails
+``--strict``::
 
-    x = hash(s)          # cascade-lint: disable=CAS002
-    # cascade-lint: disable-next-line=CAS001,CAS002
+    x = hash(s)          # cascade-lint: disable=CAS002 -- demo input, not a seed
+    # cascade-lint: disable-next-line=CAS001,CAS002 (fixture exercises the bug)
     rng = np.random.default_rng()
-    # cascade-lint: disable-file=CAS003       (first 20 lines of the file)
+    # cascade-lint: disable-file=CAS003 tracing helper, runs pre-jit
+    # (disable-file must sit in the first 20 lines of the file)
 
 Baseline format (one fingerprint per line, ``--write-baseline`` emits it)::
 
@@ -31,8 +36,11 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
+#: ids are a strict comma list; everything after them is the (required)
+#: justification text — see the module docstring's suppression syntax
 _SUPPRESS_RE = re.compile(
-    r"#\s*cascade-lint:\s*disable(?P<kind>-file|-next-line)?=(?P<ids>[A-Z0-9, ]+)")
+    r"#\s*cascade-lint:\s*disable(?P<kind>-file|-next-line)?="
+    r"(?P<ids>[A-Z0-9]+(?:\s*,\s*[A-Z0-9]+)*)(?P<just>.*)$")
 
 #: directories never scanned, wherever they appear
 _SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache", "build",
@@ -106,20 +114,28 @@ class Rule:
 # ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
-def _suppressions(lines: Sequence[str]) -> Tuple[Set[str], Dict[int, Set[str]]]:
-    """Parse ``cascade-lint:`` comments -> (file-wide ids, per-line ids).
+def _suppressions(lines: Sequence[str]) -> Tuple[
+        Set[str], Dict[int, Set[str]], List[Tuple[int, str]]]:
+    """Parse ``cascade-lint:`` comments ->
+    (file-wide ids, per-line ids, unjustified suppression lines).
 
     Per-line ids are keyed by the 1-based line a finding must sit on for
     the suppression to apply (``disable-next-line`` keys the line below
-    the comment).
+    the comment).  A suppression with no trailing justification text
+    still suppresses (the waiver the author intended stays effective)
+    but is returned in the third slot so the runner can report it — the
+    policy is "every waiver says why", enforced as a CAS000 finding.
     """
     file_ids: Set[str] = set()
     line_ids: Dict[int, Set[str]] = {}
+    bare: List[Tuple[int, str]] = []
     for i, text in enumerate(lines, start=1):
         m = _SUPPRESS_RE.search(text)
         if not m:
             continue
         ids = {s.strip() for s in m.group("ids").split(",") if s.strip()}
+        if not m.group("just").strip():
+            bare.append((i, ", ".join(sorted(ids))))
         kind = m.group("kind")
         if kind == "-file":
             if i <= 20:      # file-wide pragmas must sit near the top
@@ -128,11 +144,13 @@ def _suppressions(lines: Sequence[str]) -> Tuple[Set[str], Dict[int, Set[str]]]:
             line_ids.setdefault(i + 1, set()).update(ids)
         else:
             line_ids.setdefault(i, set()).update(ids)
-    return file_ids, line_ids
+    return file_ids, line_ids, bare
 
 
 def _is_suppressed(finding: Finding, file_ids: Set[str],
-                   line_ids: Dict[int, Set[str]]) -> bool:
+                   line_ids: Dict[int, Set[str]],
+                   bare: Sequence[Tuple[int, str]]) -> bool:
+    del bare      # justification policy is enforced by the runner
     if finding.rule in file_ids:
         return True
     return finding.rule in line_ids.get(finding.line, set())
@@ -230,8 +248,10 @@ def run_analysis(root: Path, paths: Optional[Sequence[str]] = None,
 
     repo = RepoContext(root=root)
     findings: List[Finding] = []
+    unjustified: List[Finding] = []
     suppressed = 0
-    suppression_maps: Dict[str, Tuple[Set[str], Dict[int, Set[str]]]] = {}
+    suppression_maps: Dict[str, Tuple[Set[str], Dict[int, Set[str]],
+                                      List[Tuple[int, str]]]] = {}
 
     for f in iter_py_files(root, paths):
         ctx, err = load_module(root, f)
@@ -239,7 +259,17 @@ def run_analysis(root: Path, paths: Optional[Sequence[str]] = None,
             findings.append(err)
             continue
         repo.modules.append(ctx)
-        suppression_maps[ctx.rel] = _suppressions(ctx.lines)
+        maps = _suppressions(ctx.lines)
+        suppression_maps[ctx.rel] = maps
+        for line, ids in maps[2]:
+            # the suppression stays effective, but the missing "why" is
+            # a finding of its own — and is itself non-suppressible, so
+            # the justification policy cannot be waived recursively
+            unjustified.append(Finding(
+                "CAS000", ctx.rel, line, 0,
+                f"suppression of {ids} has no justification — append "
+                "why the waiver is sound "
+                "(# cascade-lint: disable=ID <reason>)"))
         for rule in rules:
             findings.extend(rule.check_module(ctx))
 
@@ -263,6 +293,7 @@ def run_analysis(root: Path, paths: Optional[Sequence[str]] = None,
             suppressed += 1
             continue
         kept.append(fd)
+    kept.extend(unjustified)
     kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return AnalysisResult(findings=kept, suppressed=suppressed,
                           files=len(repo.modules))

@@ -1,10 +1,12 @@
-"""The cascade-lint rule registry (CAS001–CAS006)."""
+"""The cascade-lint rule registry (CAS001–CAS008)."""
 from repro.analysis.rules.determinism import DeterminismRule
 from repro.analysis.rules.docs_contract import DocsContractRule
 from repro.analysis.rules.jit_purity import JitPurityRule
 from repro.analysis.rules.kernel_contract import KernelContractRule
 from repro.analysis.rules.locks import LockDisciplineRule
 from repro.analysis.rules.rng import RngDisciplineRule
+from repro.analysis.rules.rng_flow import RngFlowRule
+from repro.analysis.rules.sharding_contract import ShardingContractRule
 
 #: registration order == report order for equal positions
 ALL_RULES = (
@@ -14,10 +16,13 @@ ALL_RULES = (
     LockDisciplineRule,
     KernelContractRule,
     DocsContractRule,
+    RngFlowRule,
+    ShardingContractRule,
 )
 
 __all__ = [
     "ALL_RULES",
     "RngDisciplineRule", "DeterminismRule", "JitPurityRule",
     "LockDisciplineRule", "KernelContractRule", "DocsContractRule",
+    "RngFlowRule", "ShardingContractRule",
 ]

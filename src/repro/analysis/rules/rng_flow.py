@@ -1,0 +1,262 @@
+"""CAS007 — interprocedural tick-RNG dataflow.
+
+CAS001 polices where generators may be *constructed*; this rule follows
+the keys after construction.  The per-tick discipline (core/rng.py)
+hands every tick a :class:`TickRngs` of purpose-separated generators —
+``jump``, ``action``, ``cache[i]`` — and the parity contract depends on
+each (lane, tick, level, purpose) generator being consumed by exactly
+one draw site and never outliving its tick:
+
+* **key reuse** — two draw sites consuming the same purpose of one
+  ``tick_rngs`` binding (directly via a ``Generator`` draw method, or by
+  passing the purpose into a function that draws from it) would make the
+  second site's values depend on whether the first executed, desyncing
+  any engine that pre-draws from one that draws lazily;
+* **key escape** — storing a tick's generator (or any purpose of it) on
+  ``self`` caches live generator *state* across ticks, so a later tick's
+  draws depend on serving history instead of ``(seed, stream, t)``.
+
+The rule builds a call summary across every scanned ``src/repro/core/``
+module: a function that draws from one of its parameters (transitively,
+to a fixpoint) is a *consumer* at that parameter position, and a
+function that assigns a parameter to ``self.<attr>`` is a *store*.
+Passing a purpose to a consumer counts as the purpose's one draw site;
+passing it to a store is an escape.  Calls to classes (dataclass records
+like ``_InFlightTick`` that carry a tick's own generators between the
+pipeline stages of the same tick) are exempt — that is transport within
+the tick, not caching across ticks.
+
+Known limit: purposes are keyed by their source text relative to the
+binding (``r.jump``, ``r.cache[i]``), so reuse hidden behind re-aliasing
+through containers is not tracked — CAS001 confines constructions
+tightly enough that the binding-rooted form covers the real engines.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, RepoContext, Rule
+from repro.analysis.rules.common import import_table, root_name
+
+#: modules the dataflow is tracked in (the tick-key universe)
+CORE_PREFIX = "src/repro/core/"
+
+#: numpy Generator draw methods — a call to one consumes the key
+DRAW_METHODS = {
+    "random", "integers", "choice", "normal", "uniform", "permutation",
+    "standard_normal", "shuffle", "permuted", "bytes",
+}
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:           # pragma: no cover - unparse is total on 3.9+
+        return "<expr>"
+
+
+def _purpose_of(node: ast.AST, bindings: Set[str]) -> Optional[str]:
+    """The purpose key of an expression rooted at a tick_rngs binding.
+
+    ``r.jump`` -> ``"r.jump"``; ``r.cache[i]`` -> ``"r.cache[i]"``; the
+    bare binding ``r`` -> ``"r"`` (the whole key bundle).  None when the
+    expression is not rooted at a binding.
+    """
+    root = root_name(node)
+    if root in bindings:
+        return _unparse(node)
+    return None
+
+
+class _FnInfo:
+    """Per-function summary used to propagate consumption across calls."""
+
+    def __init__(self, name: str, node: ast.AST, rel: str,
+                 params: List[str]):
+        self.name = name
+        self.node = node
+        self.rel = rel
+        self.params = params              # positional names, self dropped
+        self.consumes: Set[int] = set()   # param positions drawn from
+        self.stores: Set[int] = set()     # param positions put on self
+
+
+def _positional(fn) -> List[str]:
+    names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names
+
+
+def _class_names(modules) -> Set[str]:
+    names: Set[str] = set()
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                names.add(node.name)
+    return names
+
+
+def _callee_name(call: ast.Call) -> Optional[str]:
+    """Last dotted component of the call target (method-call friendly)."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+class RngFlowRule(Rule):
+    """Every per-tick RNG purpose: one consumer, no caching on self."""
+
+    id = "CAS007"
+    title = "tick-RNG dataflow (one consumer per purpose, no escapes)"
+
+    def check_repo(self, repo: RepoContext) -> Iterator[Finding]:
+        """Summaries over core/, then per-function reuse/escape checks."""
+        core = [m for m in repo.modules if m.rel.startswith(CORE_PREFIX)
+                or "/core/" in m.rel]
+        if not core:
+            return
+        classes = _class_names(repo.modules)
+        summaries = self._build_summaries(core)
+        for mod in core:
+            for fn in ast.walk(mod.tree):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield from self._check_function(mod, fn, summaries,
+                                                    classes)
+
+    # -- pass 1: which params does each core function draw from / store --
+    def _build_summaries(self, core) -> Dict[str, _FnInfo]:
+        infos: Dict[str, _FnInfo] = {}
+        for mod in core:
+            for fn in ast.walk(mod.tree):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # last definition wins on name collisions — fine for
+                    # the summary, which only answers "does a function of
+                    # this name touch its k-th argument"
+                    infos[fn.name] = _FnInfo(fn.name, fn, mod.rel,
+                                             _positional(fn))
+        changed = True
+        while changed:
+            changed = False
+            for info in infos.values():
+                params = set(info.params)
+                for node in ast.walk(info.node):
+                    if isinstance(node, ast.Call):
+                        callee = _callee_name(node)
+                        # direct draw: param.random(...) etc.
+                        if (isinstance(node.func, ast.Attribute)
+                                and node.func.attr in DRAW_METHODS):
+                            r = root_name(node.func.value)
+                            if r in params:
+                                pos = info.params.index(r)
+                                if pos not in info.consumes:
+                                    info.consumes.add(pos)
+                                    changed = True
+                        # transitive: param passed to a consuming callee
+                        sub = infos.get(callee or "")
+                        if sub is not None:
+                            for ai, arg in enumerate(node.args):
+                                r = root_name(arg)
+                                if r in params and ai in sub.consumes:
+                                    pos = info.params.index(r)
+                                    if pos not in info.consumes:
+                                        info.consumes.add(pos)
+                                        changed = True
+                    elif isinstance(node, ast.Assign):
+                        for tgt in node.targets:
+                            if (isinstance(tgt, ast.Attribute)
+                                    and isinstance(tgt.value, ast.Name)
+                                    and tgt.value.id == "self"):
+                                r = root_name(node.value)
+                                if r in params:
+                                    pos = info.params.index(r)
+                                    if pos not in info.stores:
+                                        info.stores.add(pos)
+                                        changed = True
+        return infos
+
+    # -- pass 2: per tick_rngs binding, reuse + escape ---------------------
+    def _check_function(self, mod: ModuleContext, fn,
+                        summaries: Dict[str, _FnInfo],
+                        classes: Set[str]) -> Iterator[Finding]:
+        imports = import_table(mod.tree)
+        bindings: Set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and isinstance(node.value,
+                                                            ast.Call)):
+                callee = _callee_name(node.value)
+                if callee == "tick_rngs":
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            bindings.add(tgt.id)
+        if not bindings:
+            return
+        # one walk, collecting draw sites keyed by (binding-rooted
+        # purpose) and flagging escapes as they appear.  Nested defs are
+        # NOT excluded: a closure drawing from the enclosing binding is
+        # still one site of this function's tick.
+        sites: Dict[str, List[Tuple[int, int, str]]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = _callee_name(node)
+                # direct draw on a purpose: r.jump.random(...)
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in DRAW_METHODS):
+                    purpose = _purpose_of(node.func.value, bindings)
+                    if purpose is not None:
+                        sites.setdefault(purpose, []).append(
+                            (node.lineno, node.col_offset, "draw"))
+                    continue
+                if callee in classes or (callee or "")[:1].isupper():
+                    continue        # record/dataclass transport, not a draw
+                sub = summaries.get(callee or "")
+                for ai, arg in enumerate(node.args):
+                    purpose = _purpose_of(arg, bindings)
+                    if purpose is None:
+                        continue
+                    if sub is not None and ai in sub.stores:
+                        yield Finding(
+                            self.id, mod.rel, arg.lineno, arg.col_offset,
+                            f"tick-RNG purpose '{purpose}' escapes into "
+                            f"cached state via {callee}() (stores its "
+                            f"argument on self) — per-tick keys must die "
+                            "with their tick; derive later draws from "
+                            "tick_rngs(seed, stream, t)")
+                    if sub is None or ai in sub.consumes:
+                        # unknown callees are assumed to consume: a
+                        # missed duplicate is worse than a spurious one
+                        sites.setdefault(purpose, []).append(
+                            (arg.lineno, arg.col_offset,
+                             f"passed to {callee or '<call>'}()"))
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        purpose = _purpose_of(node.value, bindings)
+                        if purpose is not None:
+                            yield Finding(
+                                self.id, mod.rel, node.lineno,
+                                node.col_offset,
+                                f"tick-RNG purpose '{purpose}' escapes "
+                                f"into cached state (self.{tgt.attr}) — "
+                                "per-tick generators must not outlive "
+                                "their tick; re-derive from "
+                                "tick_rngs(seed, stream, t) instead")
+        del imports     # reserved for qualified resolution extensions
+        for purpose, uses in sorted(sites.items()):
+            if len(uses) <= 1:
+                continue
+            first = uses[0]
+            for line, col, how in uses[1:]:
+                yield Finding(
+                    self.id, mod.rel, line, col,
+                    f"tick-RNG purpose '{purpose}' consumed again "
+                    f"({how}; first drawn at line {first[0]}) — each "
+                    "(lane, tick, level, purpose) key has exactly one "
+                    "consumer; split another purpose from the tick's "
+                    "SeedSequence instead of re-drawing")

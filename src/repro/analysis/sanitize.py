@@ -1,0 +1,754 @@
+"""cascade-san: runtime sanitizers for the cascade engines.
+
+Static rules (``repro.analysis.rules``) check what the source *says*;
+the three sanitizers here check what the engines actually *do* at
+runtime.  All are zero-cost when off: the engines' hook sites guard on
+one attribute read (``determinism_on()`` / ``trace_probe`` returning the
+function unchanged), and nothing below imports jax or numpy at module
+import time (the CI ``analysis`` job runs ``repro.analysis`` on bare
+CPU pins with no deps installed).
+
+Determinism sanitizer
+---------------------
+``enable({"determinism"})`` makes every engine tick append one record to
+a per-engine :class:`Trace`: crc32 digests of each ``STATE_ATTRS`` entry
+per level, the tick's routing decisions (chosen level / expert-called /
+prediction per lane), per-lane digests of the consumed tick-RNG draws,
+and the ring-buffer fill/ptr mirrors.  :func:`diff_traces` takes two
+traces — e.g. ``workers=1`` vs ``workers=4``, ``pipeline_depth=0`` vs
+``2``, mesh on vs off — and reports the FIRST divergence at
+(tick, lane, level, attr) granularity instead of "params mismatch
+somewhere".  ``tests/harness.py`` runs every parity test under this
+sanitizer and attaches the first divergence to any parity failure.
+
+Lock sanitizer
+--------------
+``enable({"locks"})`` instruments the ``# guarded-by:`` annotations of
+``core/experts.py`` (the same annotations cascade-lint CAS004 checks
+statically): any read/write of an annotated attribute without the
+declared lock held raises :class:`LockSanitizerError` at the access, and
+lock acquisitions are tracked in a per-thread held-stack so an
+inconsistent acquisition order across the expert pool's locks raises
+:class:`LockOrderError` (cycle detection over the order graph).
+
+Retrace sanitizer
+-----------------
+``enable({"retrace"})`` makes the engines wrap every function they jit
+with a trace-counting probe *before* staging (``trace_probe``): the
+wrapped body only executes when XLA retraces, so ``retrace_report()``
+counts compiles per compiled step function and ``retrace_check(limit)``
+flags unexpected recompilation (the engines' bucketing bounds route-pass
+shapes at O(log S); a shape leak shows up as an unbounded count).
+
+Enable via code (``enable``/``disable``), via ``serve.py
+--sanitize=determinism,locks,retrace``, or via the environment
+(``CASCADE_SANITIZE=determinism,locks`` — ``enable_from_env`` is called
+by tests/conftest.py, which is how the CI sanitizer job runs the matrix
+smoke).  See docs/ANALYSIS.md "Sanitizers".
+"""
+from __future__ import annotations
+
+import ast
+import contextlib
+import json
+import os
+import re
+import sys
+import threading
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
+
+MODES = ("determinism", "locks", "retrace")
+
+ENV_VAR = "CASCADE_SANITIZE"
+
+_active: Set[str] = set()
+_state_lock = threading.Lock()
+
+
+class SanitizerError(RuntimeError):
+    """Base class for sanitizer-detected invariant violations."""
+
+
+class LockSanitizerError(SanitizerError):
+    """A ``# guarded-by:`` attribute was touched without its lock held."""
+
+
+class LockOrderError(SanitizerError):
+    """Two locks were acquired in inconsistent order (deadlock hazard)."""
+
+
+# ---------------------------------------------------------------------------
+# mode switchboard
+# ---------------------------------------------------------------------------
+def enable(modes: Iterable[str]) -> None:
+    """Turn on the given sanitizer modes (subset of :data:`MODES`)."""
+    modes = set(modes)
+    bad = modes - set(MODES)
+    if bad:
+        raise ValueError(f"unknown sanitize mode(s) {sorted(bad)}; "
+                         f"choose from {MODES}")
+    with _state_lock:
+        _active.update(modes)
+    if "locks" in modes:
+        instrument_locks()
+
+
+def disable(modes: Optional[Iterable[str]] = None) -> None:
+    """Turn off the given modes (all when ``modes`` is None)."""
+    modes = set(MODES) if modes is None else set(modes)
+    with _state_lock:
+        _active.difference_update(modes)
+    if "locks" in modes:
+        uninstrument_locks()
+
+
+def active_modes() -> Set[str]:
+    """The currently enabled sanitizer modes."""
+    return set(_active)
+
+
+def enable_from_env(var: str = ENV_VAR) -> Set[str]:
+    """Enable the comma-separated modes named in ``$CASCADE_SANITIZE``.
+
+    A no-op when the variable is unset/empty; returns the enabled set.
+    tests/conftest.py calls this, which is how the CI sanitizer job runs
+    the whole matrix smoke under ``--sanitize``.
+    """
+    raw = os.environ.get(var, "")
+    modes = {m.strip() for m in raw.split(",") if m.strip()}
+    if modes:
+        enable(modes)
+    return modes
+
+
+# ---------------------------------------------------------------------------
+# determinism sanitizer: per-tick trace + first-divergence differ
+# ---------------------------------------------------------------------------
+def determinism_on() -> bool:
+    """Fast engine-side guard: is the determinism tracer recording?"""
+    return "determinism" in _active
+
+
+def retrace_on() -> bool:
+    """Fast engine-side guard: is the retrace counter installed?"""
+    return "retrace" in _active
+
+
+class Trace:
+    """One engine run's per-tick records (the determinism trace).
+
+    Each record is a plain dict (JSON-serializable)::
+
+        {"t":     tick number,
+         "level": [chosen level per lane]      (nlev = went to expert),
+         "called": [0/1 expert-called per lane],
+         "pred":  [emitted prediction per lane],
+         "rng":   [crc32 of lane's consumed (jump, action) draws],
+         "cache_n": [ring fill per level], "cache_ptr": [ptr per level],
+         "state": {"<level>.<attr>": crc32 of the state tree's leaves}}
+
+    Traces from runs with identical tick shapes (same S, same stream)
+    are comparable tick-by-tick with :func:`diff_traces` — the
+    sequential engine records one entry per item (a 1-lane tick), so it
+    aligns with a batched ``n_streams=1`` trace exactly.
+    """
+
+    def __init__(self) -> None:
+        self.ticks: List[dict] = []
+
+    def __len__(self) -> int:
+        return len(self.ticks)
+
+    def append(self, rec: dict) -> None:
+        """Append one tick record."""
+        self.ticks.append(rec)
+
+    def save(self, path: str) -> None:
+        """Write the trace as JSON-lines (one tick record per line)."""
+        with open(path, "w", encoding="utf-8") as fh:
+            for rec in self.ticks:
+                fh.write(json.dumps(rec) + "\n")
+
+    @staticmethod
+    def load(path: str) -> "Trace":
+        """Read a trace written by :meth:`save`."""
+        tr = Trace()
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    tr.append(json.loads(line))
+        return tr
+
+
+def trace_of(engine) -> Optional[Trace]:
+    """The trace recorded on ``engine`` (None when never recorded)."""
+    return getattr(engine, "_san_trace", None)
+
+
+def drop_trace(engine) -> None:
+    """Discard ``engine``'s recorded trace (engines call this from
+    ``reset()`` so a reused engine starts a fresh, comparable trace)."""
+    if getattr(engine, "_san_trace", None) is not None:
+        engine._san_trace = None
+
+
+def _crc(arr) -> int:
+    """crc32 of an array's raw bytes (C-order), numpy imported lazily."""
+    import numpy as np
+    a = np.ascontiguousarray(np.asarray(arr))
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF
+
+
+def lane_rng_digests(u_jump, u_act) -> List[int]:
+    """Per-lane crc32 of the consumed tick-RNG draws.
+
+    ``u_jump``/``u_act`` are the raw (nlev, S) jump/action draws; lane
+    s's digest covers its column of both (jump as float64, action as
+    float32 — the dtypes the engines consume them at), so a lane whose
+    key stream diverged is named directly by the differ.
+    """
+    import numpy as np
+    uj = np.asarray(u_jump, np.float64).reshape(len(u_jump), -1)
+    ua = np.asarray(u_act, np.float32).reshape(len(u_act), -1)
+    out = []
+    for s in range(uj.shape[1]):
+        crc = zlib.crc32(np.ascontiguousarray(uj[:, s]).tobytes())
+        crc = zlib.crc32(np.ascontiguousarray(ua[:, s]).tobytes(), crc)
+        out.append(crc & 0xFFFFFFFF)
+    return out
+
+
+def state_digests(levels, attrs: Optional[Tuple[str, ...]] = None
+                  ) -> Dict[str, int]:
+    """crc32 per ``"<level>.<attr>"`` over the state tree's leaf bytes.
+
+    ``attrs`` defaults to the engines' canonical ``STATE_ATTRS``
+    (params, opt_state, dparams, dopt_state).  Bitwise-equal state trees
+    digest identically; any leaf-level difference changes the digest, so
+    the differ can name exactly which (level, attr) moved first.
+    """
+    import jax
+    import numpy as np
+    if attrs is None:
+        from repro.core.cascade import STATE_ATTRS
+        attrs = STATE_ATTRS
+    out: Dict[str, int] = {}
+    for li, lvl in enumerate(levels):
+        for attr in attrs:
+            crc = 0
+            for leaf in jax.tree.leaves(getattr(lvl, attr)):
+                a = np.ascontiguousarray(np.asarray(leaf))
+                crc = zlib.crc32(a.tobytes(), crc)
+            out[f"{li}.{attr}"] = crc & 0xFFFFFFFF
+    return out
+
+
+def record_tick(engine, *, t: int, level, called, pred, u_jump, u_act,
+                cache_n, cache_ptr, levels) -> None:
+    """Append one tick record to ``engine``'s trace (engine hook).
+
+    Called by ``OnlineCascade.process`` and
+    ``BatchedCascadeEngine._route_resolve`` at the end of every tick,
+    only when :func:`determinism_on`.  All digesting happens here so the
+    engines stay free of sanitizer logic beyond the one guarded call.
+    """
+    import numpy as np
+    tr = getattr(engine, "_san_trace", None)
+    if tr is None:
+        tr = Trace()
+        engine._san_trace = tr
+    tr.append({
+        "t": int(t),
+        "level": [int(x) for x in np.atleast_1d(level)],
+        "called": [int(bool(x)) for x in np.atleast_1d(called)],
+        "pred": [int(x) for x in np.atleast_1d(pred)],
+        "rng": lane_rng_digests(u_jump, u_act),
+        "cache_n": [int(x) for x in cache_n],
+        "cache_ptr": [int(x) for x in cache_ptr],
+        "state": state_digests(levels),
+    })
+
+
+@contextlib.contextmanager
+def determinism_trace():
+    """Context manager: record determinism traces for a ``with`` block.
+
+    Enables the determinism sanitizer (restoring its prior off state on
+    exit — an enable that predates the block stays on) and yields; read
+    each engine's recorded trace with :func:`trace_of` after its run.
+    ``tests/harness.py run_pair`` wraps both engines' runs in this,
+    which is what gives every parity test a pinpoint first-divergence
+    report on failure.
+    """
+    was_on = determinism_on()
+    enable({"determinism"})
+    try:
+        yield
+    finally:
+        if not was_on:
+            disable({"determinism"})
+
+
+@dataclass
+class Divergence:
+    """The first point two determinism traces disagree.
+
+    ``tick`` is the engine tick number (record field ``t``); ``index``
+    its position in the trace.  ``lane``/``level``/``attr`` are set when
+    the diverging field has that granularity (routing arrays name the
+    lane, cache mirrors the level, state digests the (level, attr)
+    pair).  ``a``/``b`` are the two observed values.
+    """
+
+    tick: int
+    index: int
+    field: str
+    lane: Optional[int] = None
+    level: Optional[int] = None
+    attr: Optional[str] = None
+    a: Any = None
+    b: Any = None
+
+    def describe(self) -> str:
+        """Human-readable one-liner naming the divergence point."""
+        where = f"tick {self.tick}"
+        if self.lane is not None:
+            where += f", lane {self.lane}"
+        if self.level is not None:
+            where += f", level {self.level}"
+        if self.attr is not None:
+            where += f", attr {self.attr!r}"
+        return (f"first divergence at {where}: field {self.field!r} "
+                f"({self.a!r} vs {self.b!r})")
+
+
+#: trace record fields compared per lane (divergence names the lane)
+_LANE_FIELDS = ("rng", "level", "called", "pred")
+#: trace record fields compared per level (divergence names the level)
+_LEVEL_FIELDS = ("cache_n", "cache_ptr")
+#: canonical state-attr comparison order: parameters before their
+#: optimizer/deferral shadows, so an injected params corruption is named
+#: "params", not a same-tick downstream echo
+_ATTR_ORDER = ("params", "opt_state", "dparams", "dopt_state")
+
+
+def _state_key_order(key: str) -> Tuple[int, int, str]:
+    li, _, attr = key.partition(".")
+    rank = _ATTR_ORDER.index(attr) if attr in _ATTR_ORDER \
+        else len(_ATTR_ORDER)
+    return (int(li) if li.isdigit() else -1, rank, attr)
+
+
+def diff_traces(a, b) -> Optional[Divergence]:
+    """First divergence between two traces, or None when identical.
+
+    ``a``/``b`` are :class:`Trace` objects (or raw record lists).
+    Records are compared in order: tick number, per-lane consumed-RNG
+    digests, routing decisions (chosen level, expert-called,
+    prediction — per lane), ring-buffer mirrors (per level), then the
+    per-(level, attr) state digests.  A length mismatch diverges at the
+    first missing record.
+    """
+    ra = a.ticks if isinstance(a, Trace) else list(a)
+    rb = b.ticks if isinstance(b, Trace) else list(b)
+    for i, (x, y) in enumerate(zip(ra, rb)):
+        if x.get("t") != y.get("t"):
+            return Divergence(tick=int(x.get("t", i)), index=i, field="t",
+                              a=x.get("t"), b=y.get("t"))
+        t = int(x.get("t", i))
+        for f in _LANE_FIELDS:
+            xs, ys = x.get(f, []), y.get(f, [])
+            if len(xs) != len(ys):
+                return Divergence(tick=t, index=i, field=f,
+                                  a=len(xs), b=len(ys))
+            for lane, (xa, yb) in enumerate(zip(xs, ys)):
+                if xa != yb:
+                    return Divergence(tick=t, index=i, field=f, lane=lane,
+                                      a=xa, b=yb)
+        for f in _LEVEL_FIELDS:
+            xs, ys = x.get(f, []), y.get(f, [])
+            if len(xs) != len(ys):
+                return Divergence(tick=t, index=i, field=f,
+                                  a=len(xs), b=len(ys))
+            for li, (xa, yb) in enumerate(zip(xs, ys)):
+                if xa != yb:
+                    return Divergence(tick=t, index=i, field=f, level=li,
+                                      a=xa, b=yb)
+        sx, sy = x.get("state", {}), y.get("state", {})
+        for key in sorted(set(sx) | set(sy), key=_state_key_order):
+            if sx.get(key) != sy.get(key):
+                li, _, attr = key.partition(".")
+                return Divergence(tick=t, index=i, field="state",
+                                  level=int(li), attr=attr,
+                                  a=sx.get(key), b=sy.get(key))
+    if len(ra) != len(rb):
+        i = min(len(ra), len(rb))
+        longer = ra if len(ra) > len(rb) else rb
+        return Divergence(tick=int(longer[i].get("t", i)), index=i,
+                          field="length", a=len(ra), b=len(rb))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# lock sanitizer: runtime guarded-by enforcement + lock-order cycles
+# ---------------------------------------------------------------------------
+#: same annotation syntax as cascade-lint CAS004 (rules/locks.py)
+_GUARD_RE = re.compile(r"#\s*guarded-by:\s*(\w+)")
+
+#: constructor family — the object is not yet / no longer shared
+_EXEMPT_METHODS = {"__init__", "__post_init__", "__del__", "__new__"}
+
+_lock_patches: List[Tuple[type, str, Any]] = []
+_held = threading.local()                 # per-thread stack of held locks
+_order_edges: Dict[str, Set[str]] = {}    # lock key -> keys acquired under
+_order_violations: List[str] = []
+
+
+def _in_constructor(obj) -> bool:
+    """True when a constructor-family frame of ``obj`` is on the stack."""
+    frame = sys._getframe(2)
+    for _ in range(32):
+        if frame is None:
+            return False
+        if (frame.f_code.co_name in _EXEMPT_METHODS
+                and frame.f_locals.get("self") is obj):
+            return True
+        frame = frame.f_back
+    return False
+
+
+def _lock_is_owned(lock) -> bool:
+    owned = getattr(lock, "_is_owned", None)
+    if owned is None:
+        return True          # cannot introspect: stay permissive
+    return bool(owned())
+
+
+class _GuardedAttr:
+    """Data descriptor enforcing ``# guarded-by:`` at attribute access.
+
+    Installed over the annotated attribute on the class (wrapping the
+    original slot descriptor when the class uses ``__slots__``, or the
+    instance ``__dict__`` under the same name otherwise, so pre-existing
+    instances keep working and uninstrumenting restores them cleanly).
+    """
+
+    _MISSING = object()
+
+    def __init__(self, name: str, lock_name: str, cls_name: str,
+                 slot=None, default=_MISSING):
+        self._name = name
+        self._lock_name = lock_name
+        self._cls_name = cls_name
+        self._slot = slot
+        self._default = default
+
+    def _check(self, obj, op: str) -> None:
+        lock = getattr(obj, self._lock_name, None)
+        if lock is None:
+            return                    # lock not created yet (constructor)
+        if _lock_is_owned(lock):
+            return
+        if _in_constructor(obj):
+            return
+        raise LockSanitizerError(
+            f"{self._cls_name}.{self._name} {op} without holding "
+            f"self.{self._lock_name} (declared '# guarded-by: "
+            f"{self._lock_name}')")
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        self._check(obj, "read")
+        if self._slot is not None:
+            return self._slot.__get__(obj, objtype)
+        val = obj.__dict__.get(self._name, self._default)
+        if val is self._MISSING:
+            raise AttributeError(self._name)
+        return val
+
+    def __set__(self, obj, value):
+        self._check(obj, "write")
+        if self._slot is not None:
+            self._slot.__set__(obj, value)
+        else:
+            obj.__dict__[self._name] = value
+
+
+class _TrackedLock:
+    """Thin per-access proxy over a real RLock that records ordering."""
+
+    __slots__ = ("_real", "_key")
+
+    def __init__(self, real, key: str):
+        self._real = real
+        self._key = key
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        """Acquire the real lock, recording the acquisition order."""
+        _note_acquire(self._key, self._real)
+        if timeout == -1:
+            ok = self._real.acquire(blocking)
+        else:
+            ok = self._real.acquire(blocking, timeout)
+        if not ok:
+            _note_release(self._real)
+        return ok
+
+    def release(self) -> None:
+        """Release the real lock and pop it from the held stack."""
+        self._real.release()
+        _note_release(self._real)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def _is_owned(self) -> bool:
+        return _lock_is_owned(self._real)
+
+
+class _LockAttr:
+    """Data descriptor wrapping a lock attribute in a tracking proxy."""
+
+    def __init__(self, name: str, cls_name: str, slot=None):
+        self._name = name
+        self._key = f"{cls_name}.{name}"
+        self._slot = slot
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        if self._slot is not None:
+            real = self._slot.__get__(obj, objtype)
+        else:
+            real = obj.__dict__.get(self._name)
+        if real is None:
+            return real
+        return _TrackedLock(real, self._key)
+
+    def __set__(self, obj, value):
+        if self._slot is not None:
+            self._slot.__set__(obj, value)
+        else:
+            obj.__dict__[self._name] = value
+
+
+def _held_stack() -> List[Tuple[str, int]]:
+    stack = getattr(_held, "stack", None)
+    if stack is None:
+        stack = _held.stack = []
+    return stack
+
+
+def _note_acquire(key: str, real) -> None:
+    stack = _held_stack()
+    rid = id(real)
+    if any(r == rid for _, r in stack):
+        stack.append((key, rid))       # re-entrant: no new edge
+        return
+    cycle = None
+    with _state_lock:
+        for held_key, _ in stack:
+            if held_key != key:
+                _order_edges.setdefault(held_key, set()).add(key)
+        if _find_cycle():
+            cycle = " -> ".join(sorted(_order_edges))
+            msg = (f"lock order cycle involving {key} while holding "
+                   f"{[k for k, _ in stack]} (order graph: {cycle})")
+            _order_violations.append(msg)
+    stack.append((key, rid))
+    if cycle is not None:
+        raise LockOrderError(_order_violations[-1])
+
+
+def _note_release(real) -> None:
+    stack = _held_stack()
+    rid = id(real)
+    for i in range(len(stack) - 1, -1, -1):
+        if stack[i][1] == rid:
+            del stack[i]
+            return
+
+
+def _find_cycle() -> bool:
+    """DFS cycle check over the acquisition-order graph (keys)."""
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {k: WHITE for k in _order_edges}
+
+    def visit(u: str) -> bool:
+        color[u] = GRAY
+        for v in _order_edges.get(u, ()):
+            c = color.get(v, WHITE)
+            if c == GRAY:
+                return True
+            if c == WHITE and visit(v):
+                return True
+        color[u] = BLACK
+        return False
+
+    return any(color[k] == WHITE and visit(k) for k in list(color))
+
+
+def lock_order_violations() -> List[str]:
+    """Every lock-order cycle observed since instrumentation."""
+    return list(_order_violations)
+
+
+def _guarded_attrs_from_source(source: str) -> Dict[str, Dict[str, str]]:
+    """Parse ``# guarded-by:`` annotations -> {class: {attr: lock}}.
+
+    The same convention cascade-lint CAS004 checks statically; the lock
+    sanitizer instruments whatever the annotations declare, so the
+    static and dynamic checkers can never drift apart.
+    """
+    tree = ast.parse(source)
+    lines = source.splitlines()
+    out: Dict[str, Dict[str, str]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        guarded: Dict[str, str] = {}
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                ln = sub.lineno
+                m = _GUARD_RE.search(lines[ln - 1]) if ln <= len(lines) \
+                    else None
+                if not m:
+                    continue
+                targets = sub.targets if isinstance(sub, ast.Assign) \
+                    else [sub.target]
+                for tgt in targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        guarded[tgt.attr] = m.group(1)
+                    elif isinstance(tgt, ast.Name):
+                        guarded[tgt.id] = m.group(1)
+        if guarded:
+            out[node.name] = guarded
+    return out
+
+
+def instrument_locks(module=None) -> List[str]:
+    """Install runtime guarded-by enforcement on ``module``'s classes.
+
+    ``module`` defaults to ``repro.core.experts`` (imported lazily — the
+    static-analysis surface stays importable without jax).  Idempotent;
+    returns the list of instrumented ``Class.attr`` names.  Undo with
+    :func:`uninstrument_locks`.
+    """
+    if _lock_patches:
+        return [f"{cls.__name__}.{name}" for cls, name, _ in _lock_patches]
+    if module is None:
+        import repro.core.experts as module
+    import inspect
+    source = inspect.getsource(module)
+    per_class = _guarded_attrs_from_source(source)
+    installed: List[str] = []
+    for cls_name, guarded in per_class.items():
+        cls = getattr(module, cls_name, None)
+        if cls is None:
+            continue
+        lock_names = set(guarded.values())
+        for attr, lock_name in guarded.items():
+            orig = inspect.getattr_static(cls, attr, _GuardedAttr._MISSING)
+            slot = orig if hasattr(orig, "__set__") and hasattr(
+                orig, "__get__") and not isinstance(
+                orig, (_GuardedAttr, _LockAttr)) else None
+            default = (_GuardedAttr._MISSING if slot is not None
+                       or orig is _GuardedAttr._MISSING else orig)
+            setattr(cls, attr, _GuardedAttr(attr, lock_name, cls_name,
+                                            slot=slot, default=default))
+            _lock_patches.append((cls, attr, orig))
+            installed.append(f"{cls_name}.{attr}")
+        for lock_name in lock_names:
+            orig = inspect.getattr_static(cls, lock_name,
+                                          _GuardedAttr._MISSING)
+            slot = orig if hasattr(orig, "__set__") and hasattr(
+                orig, "__get__") and not isinstance(
+                orig, (_GuardedAttr, _LockAttr)) else None
+            setattr(cls, lock_name, _LockAttr(lock_name, cls_name,
+                                              slot=slot))
+            _lock_patches.append((cls, lock_name, orig))
+            installed.append(f"{cls_name}.{lock_name}")
+    return installed
+
+
+def uninstrument_locks() -> None:
+    """Restore every class patched by :func:`instrument_locks`."""
+    while _lock_patches:
+        cls, name, orig = _lock_patches.pop()
+        if orig is _GuardedAttr._MISSING:
+            try:
+                delattr(cls, name)
+            except AttributeError:
+                pass
+        else:
+            setattr(cls, name, orig)
+    with _state_lock:
+        _order_edges.clear()
+        del _order_violations[:]
+
+
+def tracked_rlock(key: str):
+    """A standalone order-tracked RLock (for tests and ad-hoc use)."""
+    import threading as _threading
+    return _TrackedLock(_threading.RLock(), key)
+
+
+# ---------------------------------------------------------------------------
+# retrace sanitizer: count jit recompiles per compiled step function
+# ---------------------------------------------------------------------------
+_retrace_counts: Dict[str, int] = {}
+
+
+def trace_probe(name: str, fn: Callable) -> Callable:
+    """Wrap ``fn`` so each XLA *trace* of it bumps a named counter.
+
+    The engines call this on every function they are about to
+    ``jax.jit`` — the wrapper's Python body only runs at trace time, so
+    its call count IS the compile count.  Returns ``fn`` unchanged when
+    the retrace sanitizer is off (zero cost: no wrapper in the compiled
+    path, no counter).
+    """
+    if not retrace_on():
+        return fn
+
+    def traced(*args, **kwargs):
+        with _state_lock:
+            _retrace_counts[name] = _retrace_counts.get(name, 0) + 1
+        return fn(*args, **kwargs)
+
+    return traced
+
+
+def retrace_report() -> Dict[str, int]:
+    """Compile counts per probed step function (name -> traces)."""
+    with _state_lock:
+        return dict(_retrace_counts)
+
+
+def reset_retrace() -> None:
+    """Zero the compile counters (call before the run being measured)."""
+    with _state_lock:
+        _retrace_counts.clear()
+
+
+def retrace_check(limit: int) -> Dict[str, int]:
+    """Step functions that compiled more than ``limit`` times.
+
+    The engines bound compiled shapes by bucketing gathered lane subsets
+    (O(log S) shapes per route pass), so a count past a generous limit
+    means a shape or dtype is leaking into the traced signature and
+    every tick is recompiling.  Returns the offenders (empty = clean).
+    """
+    with _state_lock:
+        return {k: v for k, v in _retrace_counts.items() if v > limit}

@@ -262,6 +262,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.core.cascade import CascadeConfig, _Level, make_history
 from repro.core.deferral import reexploration_floor
 from repro.core.experts import ExpertTicket
@@ -342,6 +343,9 @@ class _InFlightTick:
     version: int                  # engine commit counter at dispatch
     beta_after: List[float]       # per-level beta after this tick's decay
     lane_cache: Optional[list] = None   # per-lane cache rngs (per_lane)
+    u_jump_raw: Optional[np.ndarray] = None  # (nlev, S) raw jump draws,
+                                             # kept only under the
+                                             # determinism sanitizer
 
 
 class BatchedCascadeEngine:
@@ -489,6 +493,9 @@ class BatchedCascadeEngine:
         self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
         if self.commit_log is not None:
             self.commit_log.clear()
+        # a recorded determinism-sanitizer trace belongs to the old
+        # stream too — a reused engine starts a fresh, comparable trace
+        _san.drop_trace(self)
 
     # -- aggregates -----------------------------------------------------
     @property
@@ -514,8 +521,11 @@ class BatchedCascadeEngine:
         # buffer is donated: each in-flight tick's input is consumed
         # exactly once by its dispatch (sharding.jit_route_pass)
         donate_mesh = self.mesh if self.pipeline_depth else None
-        self._predict_defer = [jit_route_pass(lvl.route_pass, donate_mesh)
-                               for lvl in levels]
+        self._predict_defer = [
+            jit_route_pass(
+                _san.trace_probe(f"route_pass[{i}]", lvl.route_pass),
+                donate_mesh)
+            for i, lvl in enumerate(levels)]
 
         def scatter(cx_t, cy_t, feats_t, y_full, called, ptr_arr):
             """Vectorized ring-buffer insert of a tick's demonstrations."""
@@ -536,7 +546,8 @@ class BatchedCascadeEngine:
         # ring buffers donated; with a mesh the outputs stay pinned
         # replicated so the donation chain survives the per-lane commit
         # mode's one-scatter-per-lane cadence (sharding.jit_cache_scatter)
-        self._scatter = jit_cache_scatter(scatter, self.mesh)
+        self._scatter = jit_cache_scatter(
+            _san.trace_probe("cache_scatter", scatter), self.mesh)
         self._bs_list = bs_list
 
     def _bucket(self, n: int) -> int:
@@ -754,7 +765,8 @@ class BatchedCascadeEngine:
             jump=jump, u_act=u_act, budget_ok=budget_ok,
             cache_rngs=cache_rngs, feats_cache=feats_cache, sel0=sel0,
             xb0=xb0, handles=handles, version=self._state_version,
-            beta_after=list(self._route_beta), lane_cache=lane_cache)
+            beta_after=list(self._route_beta), lane_cache=lane_cache,
+            u_jump_raw=u_jump if _san.determinism_on() else None)
 
     def _route_resolve(self, rec: _InFlightTick) -> dict:
         """Stage B: host routing, expert submit, commits, accounting.
@@ -957,6 +969,16 @@ class BatchedCascadeEngine:
             self.history["expert_called"].append(called.copy())
             self.history["cost"].append(cost_out.copy())
             self.history["J"].append(J_t.copy())
+        if _san.determinism_on() and rec.u_jump_raw is not None:
+            # determinism-sanitizer trace: one record per resolved tick,
+            # after this tick's due commits — a deterministic point of
+            # the schedule, so traces from any worker count / pipeline
+            # depth / mesh placement are comparable tick-by-tick
+            _san.record_tick(
+                self, t=t, level=levels_out, called=called,
+                pred=predictions, u_jump=rec.u_jump_raw, u_act=u_act,
+                cache_n=self._cache_n, cache_ptr=self._cache_ptr,
+                levels=self.levels)
         return {
             # which stream items this tick served (pipelined callers map
             # late-resolving outputs back to their submission)

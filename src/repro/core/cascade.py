@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.core.deferral import (
     DeferralSpec, deferral_grads_weighted, deferral_init,
     deferral_prob, deferral_update_terms, reexploration_floor)
@@ -360,14 +361,27 @@ class _Level:
             probs = predict(params, x)
             return probs, deferral_prob(dparams, probs[None])[0]
 
-        self._predict = jax.jit(predict)
-        self._predict_and_defer = jax.jit(predict_and_defer)
-        self._student_step = jax.jit(student_step)
-        self._student_step_k = jax.jit(student_step_k)
-        self._deferral_step = jax.jit(deferral_step)
-        self._deferral_step_k = jax.jit(deferral_step_k)
-        self._dprob = jax.jit(
-            lambda dp, probs: deferral_prob(dp, probs[None])[0])
+        # every staged function goes through the retrace-sanitizer probe
+        # (a no-op returning the function unchanged unless the retrace
+        # sanitizer was enabled before the level was built); counters are
+        # keyed by student kind + step name, so levels sharing a kind
+        # aggregate into one counter
+        probe = _san.trace_probe
+        kind = spec.kind
+        self._predict = jax.jit(probe(f"{kind}.predict", predict))
+        self._predict_and_defer = jax.jit(
+            probe(f"{kind}.predict_and_defer", predict_and_defer))
+        self._student_step = jax.jit(
+            probe(f"{kind}.student_step", student_step))
+        self._student_step_k = jax.jit(
+            probe(f"{kind}.student_step_k", student_step_k))
+        self._deferral_step = jax.jit(
+            probe(f"{kind}.deferral_step", deferral_step))
+        self._deferral_step_k = jax.jit(
+            probe(f"{kind}.deferral_step_k", deferral_step_k))
+        self._dprob = jax.jit(probe(
+            f"{kind}.dprob",
+            lambda dp, probs: deferral_prob(dp, probs[None])[0]))
 
     # -- cache ---------------------------------------------------------
     def cache_add(self, x: np.ndarray, y: int):
@@ -455,6 +469,9 @@ class OnlineCascade:
         if self.history is not None:
             for v in self.history.values():
                 v.clear()
+        # a recorded determinism-sanitizer trace belongs to the old
+        # stream too — a reused engine starts a fresh, comparable trace
+        _san.drop_trace(self)
 
     # -- cost of deferring FROM level i (to i+1) -----------------------
     def _defer_cost(self, i: int) -> float:
@@ -473,7 +490,11 @@ class OnlineCascade:
         n_levels = len(self.levels)
         rngs = tick_rngs(cfg.seed, self.stream_id, self.t, n_levels)
         u_jump = rngs.jump.random(n_levels)
-        u_act = rngs.action.random(n_levels) if cfg.sample_actions else None
+        # the action draws also feed the determinism-sanitizer trace (the
+        # batched engine always draws them); the extra draw consumes only
+        # the tick's throwaway `action` generator, never jump/cache state
+        u_act = (rngs.action.random(n_levels)
+                 if cfg.sample_actions or _san.determinism_on() else None)
         feat_cache: Dict[int, np.ndarray] = {}
 
         def feat(i):
@@ -586,6 +607,20 @@ class OnlineCascade:
             self.history["expert_called"].append(expert_called)
             self.history["cost"].append(episode_cost_units)
             self.history["J"].append(J_t)
+        if _san.determinism_on():
+            # one 1-lane record per item: the sequential reference is
+            # lane 0 of a batched engine, and its trace aligns with a
+            # batched n_streams=1 trace tick-for-tick
+            _san.record_tick(
+                self, t=self.t,
+                level=[len(self.levels) if expert_called
+                       else chosen_level],
+                called=[expert_called], pred=[prediction],
+                u_jump=u_jump.reshape(n_levels, 1),
+                u_act=u_act.reshape(n_levels, 1),
+                cache_n=[lvl.cache_n for lvl in self.levels],
+                cache_ptr=[lvl.cache_ptr for lvl in self.levels],
+                levels=self.levels)
         return {
             "prediction": prediction,
             "level": chosen_level,

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.data.features import hash_ids
 from repro.data.streams import Stream
 from repro.models.students import (
@@ -367,8 +368,8 @@ class ModelExpert:
         spec = self.spec
         self.workers = max(int(self.workers), 1)
         self._lock = threading.RLock()
-        self._predict = jax.jit(
-            lambda p, ids: tinytf_predict(p, ids, spec))
+        self._predict = jax.jit(_san.trace_probe(
+            "expert.predict", lambda p, ids: tinytf_predict(p, ids, spec)))
 
     def label(self, idx: int, doc: np.ndarray) -> int:
         """Annotate one stream item with a single model forward."""

@@ -23,6 +23,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.core import (BatchedCascadeEngine, OnlineCascade, SimulatedExpert,
                         default_cascade_config)
 from repro.core.experts import train_model_expert
@@ -96,7 +97,7 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                          mesh=None, updates_per_tick: str = "single",
                          async_delay: int = 0, pipeline_depth: int = 0,
                          expert_workers: int = 1, per_lane: bool = False,
-                         ladder: str = "default"):
+                         ladder: str = "default", trace_out: str = ""):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -148,6 +149,7 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
     dt = time.time() - t0
+    _save_trace(engine, trace_out)
     frac = metrics["expert_calls"] / len(stream)
     lanes = (f"batch={batch}" if mesh is None else
              f"batch={batch} mesh={dict(mesh.shape)}")
@@ -178,9 +180,47 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     return metrics
 
 
+def _save_trace(engine, trace_out: str) -> None:
+    """Persist the engine's determinism-sanitizer trace, if both exist.
+
+    Two runs' saved traces (e.g. ``--expert-workers 1`` vs ``4``, or
+    ``--pipeline-depth 0`` vs ``2``) feed
+    ``repro.analysis.sanitize.diff_traces`` / ``Trace.load`` for a
+    first-divergence report at (tick, lane, level, attr) granularity.
+    """
+    tr = _san.trace_of(engine)
+    if not trace_out:
+        return
+    if tr is None:
+        print("--trace-out set but no determinism trace was recorded "
+              "(enable with --sanitize determinism)")
+        return
+    tr.save(trace_out)
+    print(f"determinism trace: {len(tr)} tick record(s) -> {trace_out}")
+
+
+def _sanitizer_reports(modes) -> None:
+    """Post-run reports for the enabled runtime sanitizers."""
+    if "retrace" in modes:
+        rep = _san.retrace_report()
+        total = sum(rep.values())
+        print(f"retrace sanitizer: {total} compile(s) across "
+              f"{len(rep)} step function(s)")
+        flagged = _san.retrace_check(limit=16)
+        for name, n in sorted(flagged.items()):
+            print(f"  UNEXPECTED RETRACES: {name} compiled {n}x — a "
+                  "shape/dtype is leaking into the traced signature")
+    if "locks" in modes:
+        violations = _san.lock_order_violations()
+        print(f"lock sanitizer: clean run, "
+              f"{len(violations)} order violation(s)")
+        for v in violations:
+            print(f"  {v}")
+
+
 def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
                  expert_kind: str = "model", seed: int = 0,
-                 log_every: int = 500):
+                 log_every: int = 500, trace_out: str = ""):
     """Sequential reference loop with probe/replay expert micro-batching."""
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
@@ -230,6 +270,7 @@ def serve_stream(dataset: str, samples: int, mu: float, microbatch: int,
                   f"expert_calls={cascade.expert_calls} "
                   f"({(time.time()-t0)/i*1000:.1f} ms/query)", flush=True)
 
+    _save_trace(cascade, trace_out)
     acc = float(np.mean(preds == stream.labels))
     frac = cascade.expert_calls / len(stream)
     mean_eb = float(np.mean(expert_batch_sizes)) if expert_batch_sizes else 0
@@ -349,7 +390,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="stream/cascade RNG seed (core/rng.py per-tick "
                          "key discipline)")
+    ap.add_argument("--sanitize", default="",
+                    help="comma list of runtime sanitizers to serve "
+                         "under (repro.analysis.sanitize): "
+                         "'determinism' records the per-tick trace "
+                         "(save with --trace-out, diff two runs with "
+                         "diff_traces), 'locks' enforces the expert "
+                         "pool's # guarded-by: annotations at runtime "
+                         "+ lock-order cycles, 'retrace' counts jit "
+                         "compiles per step function and flags leaks")
+    ap.add_argument("--trace-out", default="",
+                    help="write the determinism-sanitizer trace to this "
+                         "JSONL path after serving (requires "
+                         "--sanitize determinism)")
     args = ap.parse_args()
+    modes = {m.strip() for m in args.sanitize.split(",") if m.strip()}
+    if modes:
+        _san.enable(modes)    # before engine build: jit probes hook in
     if args.engine == "batched":
         from repro.launch.mesh import parse_mesh_spec
         serve_stream_batched(args.dataset, args.samples, args.mu,
@@ -361,10 +418,14 @@ def main():
                              pipeline_depth=args.pipeline_depth,
                              expert_workers=args.expert_workers,
                              per_lane=args.per_lane_commit,
-                             ladder=args.ladder)
+                             ladder=args.ladder,
+                             trace_out=args.trace_out)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
-                     expert_kind=args.expert, seed=args.seed)
+                     expert_kind=args.expert, seed=args.seed,
+                     trace_out=args.trace_out)
+    if modes:
+        _sanitizer_reports(modes)
 
 
 if __name__ == "__main__":

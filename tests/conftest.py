@@ -4,3 +4,10 @@ import sys
 # Tests run single-device (the dry-run sets its own 512-device flag in a
 # subprocess; never set it globally here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# CASCADE_SANITIZE=determinism,locks,retrace runs the whole suite under
+# the named runtime sanitizers (the CI sanitizer job does this for the
+# matrix smoke); a no-op when the variable is unset.
+from repro.analysis import sanitize as _san  # noqa: E402
+
+_san.enable_from_env()

@@ -21,6 +21,7 @@ from dataclasses import replace
 import jax
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.core import (BatchedCascadeEngine, OnlineCascade,
                         SimulatedExpert, default_cascade_config)
 from repro.core.cascade import STATE_ATTRS
@@ -123,8 +124,25 @@ def expert_calls_total(engine) -> int:
 
 
 def run_pair(ref, new, stream):
-    """Serve ``stream`` on both engines; returns (m_ref, m_new)."""
-    return ref.run(stream), new.run(stream)
+    """Serve ``stream`` on both engines; returns (m_ref, m_new).
+
+    Both runs execute under the determinism sanitizer
+    (``repro.analysis.sanitize``), so each engine carries a per-tick
+    trace afterwards and a failing ``assert_run_parity`` can name the
+    first diverging (tick, lane, level, attr) instead of "params
+    mismatch somewhere".
+    """
+    with _san.determinism_trace():
+        return ref.run(stream), new.run(stream)
+
+
+def first_divergence(ref, new):
+    """The engines' first trace divergence (None when traces are
+    missing — engines run outside ``run_pair`` — or identical)."""
+    ta, tb = _san.trace_of(ref), _san.trace_of(new)
+    if ta is None or tb is None:
+        return None
+    return _san.diff_traces(ta, tb)
 
 
 def assert_run_parity(ref, m_ref, new, m_new, *, state="bitwise",
@@ -139,21 +157,34 @@ def assert_run_parity(ref, m_ref, new, m_new, *, state="bitwise",
     ``None`` to skip the state check (delay-semantics comparisons where
     trajectories legitimately differ).  ``costs=True`` additionally
     pins per-item cost_units (the fallback-costing contract).
+
+    When the engines ran through ``run_pair`` their determinism-
+    sanitizer traces are compared on failure and the first diverging
+    (tick, lane, level, attr) is appended to the assertion message.
+    Trace differences alone never fail a passing contract: allclose-
+    mode runs legitimately differ in state digests at the ulp level.
     """
-    np.testing.assert_array_equal(m_ref["predictions"],
-                                  m_new["predictions"])
-    for key in history_keys:
-        np.testing.assert_array_equal(flat_history(ref, key),
-                                      flat_history(new, key))
-    if costs:
-        np.testing.assert_allclose(
-            flat_history(ref, "cost").astype(np.float64),
-            flat_history(new, "cost").astype(np.float64))
-    assert expert_calls_total(ref) == expert_calls_total(new)
-    if state == "bitwise":
-        assert_state_equal(ref.levels, new.levels, attrs)
-    elif state == "allclose":
-        assert_state_equal(ref.levels, new.levels, attrs,
-                           rtol=rtol, atol=atol)
-    elif state is not None:
-        raise ValueError(f"unknown state mode {state!r}")
+    try:
+        np.testing.assert_array_equal(m_ref["predictions"],
+                                      m_new["predictions"])
+        for key in history_keys:
+            np.testing.assert_array_equal(flat_history(ref, key),
+                                          flat_history(new, key))
+        if costs:
+            np.testing.assert_allclose(
+                flat_history(ref, "cost").astype(np.float64),
+                flat_history(new, "cost").astype(np.float64))
+        assert expert_calls_total(ref) == expert_calls_total(new)
+        if state == "bitwise":
+            assert_state_equal(ref.levels, new.levels, attrs)
+        elif state == "allclose":
+            assert_state_equal(ref.levels, new.levels, attrs,
+                               rtol=rtol, atol=atol)
+        elif state is not None:
+            raise ValueError(f"unknown state mode {state!r}")
+    except AssertionError as err:
+        div = first_divergence(ref, new)
+        if div is not None:
+            raise AssertionError(
+                f"{err}\n[cascade-san] {div.describe()}") from err
+        raise

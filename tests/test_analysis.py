@@ -19,11 +19,12 @@ import pytest
 
 from repro.analysis import (
     ALL_RULES, fingerprint, load_baseline, render_baseline, run_analysis)
-from repro.analysis.cli import find_repo_root, main
-from repro.analysis.engine import ModuleContext
+from repro.analysis.cli import _render_github, find_repo_root, main
+from repro.analysis.engine import Finding, ModuleContext
 from repro.analysis.rules import (
     DeterminismRule, DocsContractRule, JitPurityRule, KernelContractRule,
-    LockDisciplineRule, RngDisciplineRule)
+    LockDisciplineRule, RngDisciplineRule, RngFlowRule,
+    ShardingContractRule)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
@@ -491,6 +492,227 @@ class TestDocsContract:
 
 
 # ---------------------------------------------------------------------------
+# CAS007 — interprocedural tick-RNG dataflow (fixture tree)
+# ---------------------------------------------------------------------------
+def _write_core_module(root: Path, src: str, name: str = "engine.py"):
+    pkg = root / "src/repro/core"
+    pkg.mkdir(parents=True, exist_ok=True)
+    (pkg / name).write_text(textwrap.dedent(src))
+
+
+class TestRngFlow:
+    def _findings(self, tmp_path):
+        res = run_analysis(tmp_path, paths=["src"], rules=[RngFlowRule()])
+        return res.findings
+
+    def test_double_draw_same_purpose_flagged(self, tmp_path):
+        _write_core_module(tmp_path, """
+            from repro.core.rng import tick_rngs
+            class Engine:
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    u1 = r.jump.random(2)
+                    u2 = r.jump.random(2)
+                    return u1 + u2
+        """)
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and fs[0].rule == "CAS007"
+        assert "consumed again" in fs[0].message
+        assert "'r.jump'" in fs[0].message
+
+    def test_draw_plus_consuming_callee_flagged(self, tmp_path):
+        # interprocedural half of the reuse check: helper() draws from
+        # its parameter (the summary pass must discover that), so passing
+        # r.jump after drawing from it directly is a second consumption
+        _write_core_module(tmp_path, """
+            from repro.core.rng import tick_rngs
+            def helper(gen):
+                return gen.random(4)
+            class Engine:
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    u = r.jump.random(2)
+                    return u + helper(r.jump)
+        """)
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and "passed to helper()" in fs[0].message
+
+    def test_transitive_consumer_chain_resolved(self, tmp_path):
+        # helper -> inner -> draw: the summary fixpoint must propagate
+        # consumption through TWO call hops before the reuse is visible
+        _write_core_module(tmp_path, """
+            from repro.core.rng import tick_rngs
+            def inner(gen):
+                return gen.integers(0, 8)
+            def helper(gen):
+                return inner(gen)
+            class Engine:
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    a = helper(r.cache[0])
+                    b = helper(r.cache[0])
+                    return a + b
+        """)
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and "'r.cache[0]'" in fs[0].message
+
+    def test_escape_to_self_flagged(self, tmp_path):
+        _write_core_module(tmp_path, """
+            from repro.core.rng import tick_rngs
+            class Engine:
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    self._rng = r.action
+                    return self._rng.random()
+        """)
+        fs = self._findings(tmp_path)
+        assert any("escapes" in f.message and "self._rng" in f.message
+                   for f in fs)
+
+    def test_escape_via_storing_callee_flagged(self, tmp_path):
+        # the store is one call away: stash() assigns its parameter to
+        # self, so passing a purpose into it caches live generator state
+        _write_core_module(tmp_path, """
+            from repro.core.rng import tick_rngs
+            class Engine:
+                def stash(self, gen):
+                    self._gen = gen
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    self.stash(r.action)
+                    return 0
+        """)
+        fs = self._findings(tmp_path)
+        assert any("escapes" in f.message and "stash()" in f.message
+                   for f in fs)
+
+    def test_one_consumer_per_purpose_clean(self, tmp_path):
+        # the good twin mirrors the real engines: one draw per purpose,
+        # record-class transport exempt, unknown consumers count once
+        _write_core_module(tmp_path, """
+            from repro.core.rng import sample_cache_indices, tick_rngs
+            class TickRecord:
+                pass
+            class Engine:
+                def process_tick(self, t):
+                    r = tick_rngs(self.seed, 0, t, n_levels=2)
+                    u = r.jump.random(2)
+                    rec = TickRecord(r.action)
+                    for i in range(2):
+                        sample_cache_indices(r.cache[i], 8, 4)
+                    return u, rec
+        """)
+        assert self._findings(tmp_path) == []
+
+    def test_real_core_tree_conforms(self):
+        res = run_analysis(REPO_ROOT, paths=["src"], rules=[RngFlowRule()])
+        assert res.findings == [], "\n".join(
+            f.render() for f in res.findings)
+
+
+# ---------------------------------------------------------------------------
+# CAS008 — sharding-spec consistency (fixture tree)
+# ---------------------------------------------------------------------------
+class TestShardingContract:
+    SPECS = """
+        import jax
+        def lane_spec(mesh):
+            return None
+        def put_lanes(x, mesh=None):
+            return x
+        def jit_scatter(fn):
+            return jax.jit(fn, donate_argnums=(0,))
+    """
+    INIT = """
+        from repro.sharding.specs import jit_scatter, lane_spec, put_lanes
+        __all__ = ["lane_spec", "put_lanes", "jit_scatter"]
+    """
+
+    def _tree(self, tmp_path, core_src: str):
+        pkg = tmp_path / "src/repro/sharding"
+        pkg.mkdir(parents=True)
+        (pkg / "specs.py").write_text(textwrap.dedent(self.SPECS))
+        (pkg / "__init__.py").write_text(textwrap.dedent(self.INIT))
+        _write_core_module(tmp_path, core_src, "batched.py")
+
+    def _findings(self, tmp_path):
+        res = run_analysis(tmp_path, paths=["src"],
+                           rules=[ShardingContractRule()])
+        return res.findings
+
+    def test_conforming_core_clean(self, tmp_path):
+        self._tree(tmp_path, """
+            from repro.sharding import jit_scatter, put_lanes
+            class Engine:
+                def __init__(self, fn):
+                    self._scatter = jit_scatter(fn)
+                    self._cache = put_lanes([0.0])
+                def step(self):
+                    out = self._scatter(self._cache)
+                    self._cache = out
+                    return out
+        """)
+        assert self._findings(tmp_path) == []
+
+    def test_import_of_missing_helper_flagged(self, tmp_path):
+        self._tree(tmp_path, """
+            from repro.sharding import put_lanes_v2
+            x = put_lanes_v2([0.0])
+        """)
+        fs = self._findings(tmp_path)
+        assert any("no such helper" in f.message for f in fs)
+
+    def test_unexported_helper_flagged(self, tmp_path):
+        pkg = tmp_path / "src/repro/sharding"
+        pkg.mkdir(parents=True)
+        (pkg / "specs.py").write_text(textwrap.dedent(self.SPECS))
+        (pkg / "__init__.py").write_text(textwrap.dedent("""
+            from repro.sharding.specs import lane_spec
+            __all__ = ["lane_spec"]
+        """))
+        _write_core_module(tmp_path, """
+            from repro.sharding import put_lanes
+            x = put_lanes([0.0])
+        """, "batched.py")
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and "__all__" in fs[0].message
+
+    def test_bare_device_put_flagged_explicit_clean(self, tmp_path):
+        self._tree(tmp_path, """
+            import jax
+            class Engine:
+                def __init__(self, x, sharding):
+                    self.a = jax.device_put(x)
+                    self.b = jax.device_put(x, sharding)
+        """)
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and "bare jax.device_put" in fs[0].message
+
+    def test_donated_self_attr_without_rebind_flagged(self, tmp_path):
+        # the cross-module donation hole CAS003 cannot see: the
+        # donate_argnums annotation lives in sharding/specs.py while the
+        # stale self._cache read-after-donation sits in core/
+        self._tree(tmp_path, """
+            from repro.sharding import jit_scatter
+            class Engine:
+                def __init__(self, fn):
+                    self._scatter = jit_scatter(fn)
+                def step(self):
+                    out = self._scatter(self._cache)
+                    return out
+        """)
+        fs = self._findings(tmp_path)
+        assert len(fs) == 1 and "donated position 0" in fs[0].message
+        assert "_cache" in fs[0].message
+
+    def test_real_core_tree_conforms(self):
+        res = run_analysis(REPO_ROOT, paths=["src"],
+                           rules=[ShardingContractRule()])
+        assert res.findings == [], "\n".join(
+            f.render() for f in res.findings)
+
+
+# ---------------------------------------------------------------------------
 # engine: suppressions, baseline, CLI
 # ---------------------------------------------------------------------------
 class TestEngine:
@@ -499,7 +721,7 @@ class TestEngine:
         (tmp_path / "examples/e.py").write_text(
             "import numpy as np\n"
             "r = np.random.default_rng()"
-            "  # cascade-lint: disable=CAS001\n")
+            "  # cascade-lint: disable=CAS001 demo entropy source\n")
         res = run_analysis(tmp_path, paths=["examples"],
                            rules=[RngDisciplineRule()])
         assert res.findings == [] and res.suppressed == 1
@@ -508,10 +730,10 @@ class TestEngine:
         (tmp_path / "examples").mkdir()
         (tmp_path / "examples/a.py").write_text(
             "import numpy as np\n"
-            "# cascade-lint: disable-next-line=CAS001\n"
+            "# cascade-lint: disable-next-line=CAS001 demo entropy\n"
             "r = np.random.default_rng()\n")
         (tmp_path / "examples/b.py").write_text(
-            "# cascade-lint: disable-file=CAS001\n"
+            "# cascade-lint: disable-file=CAS001 demo entropy\n"
             "import numpy as np\n"
             "r = np.random.default_rng()\n"
             "q = np.random.default_rng()\n")
@@ -524,7 +746,7 @@ class TestEngine:
         (tmp_path / "examples/e.py").write_text(
             "import numpy as np\n"
             "r = np.random.default_rng()"
-            "  # cascade-lint: disable=CAS002\n")
+            "  # cascade-lint: disable=CAS002 wrong rule on purpose\n")
         res = run_analysis(tmp_path, paths=["examples"],
                            rules=[RngDisciplineRule()])
         assert len(res.findings) == 1
@@ -586,6 +808,92 @@ class TestEngine:
         res = run_analysis(tmp_path, paths=["examples"],
                            rules=[RngDisciplineRule()])
         assert len(res.findings) == 1 and res.findings[0].rule == "CAS000"
+
+
+# ---------------------------------------------------------------------------
+# suppression-justification policy + --format github
+# ---------------------------------------------------------------------------
+class TestSuppressionPolicy:
+    def test_bare_suppression_still_suppresses_but_is_flagged(
+            self, tmp_path):
+        (tmp_path / "examples").mkdir()
+        (tmp_path / "examples/e.py").write_text(
+            "import numpy as np\n"
+            "r = np.random.default_rng()"
+            "  # cascade-lint: disable=CAS001\n")
+        res = run_analysis(tmp_path, paths=["examples"],
+                           rules=[RngDisciplineRule()])
+        # the waiver the author intended stays effective ...
+        assert res.suppressed == 1
+        # ... but the missing "why" is a CAS000 finding of its own
+        assert len(res.findings) == 1
+        assert res.findings[0].rule == "CAS000"
+        assert "no justification" in res.findings[0].message
+        assert res.findings[0].line == 2
+
+    def test_justified_suppression_is_clean(self, tmp_path):
+        (tmp_path / "examples").mkdir()
+        (tmp_path / "examples/e.py").write_text(
+            "import numpy as np\n"
+            "r = np.random.default_rng()"
+            "  # cascade-lint: disable=CAS001 -- demo entropy, not "
+            "engine state\n")
+        res = run_analysis(tmp_path, paths=["examples"],
+                           rules=[RngDisciplineRule()])
+        assert res.findings == [] and res.suppressed == 1
+
+    def test_justification_policy_is_not_waivable(self, tmp_path):
+        # a disable-file=CAS000 cannot hide the bare-suppression report:
+        # the policy findings are appended after the suppression filter
+        (tmp_path / "examples").mkdir()
+        (tmp_path / "examples/e.py").write_text(
+            "# cascade-lint: disable-file=CAS000 trying to hide\n"
+            "import numpy as np\n"
+            "r = np.random.default_rng()"
+            "  # cascade-lint: disable=CAS001\n")
+        res = run_analysis(tmp_path, paths=["examples"],
+                           rules=[RngDisciplineRule()])
+        assert any(f.rule == "CAS000" and "no justification" in f.message
+                   for f in res.findings)
+
+
+class TestGithubFormat:
+    def _dirty_tree(self, tmp_path):
+        (tmp_path / "pyproject.toml").write_text("[project]\n")
+        (tmp_path / "src").mkdir()
+        (tmp_path / "src/dirty.py").write_text(
+            "import numpy as np\nr = np.random.default_rng()\n")
+
+    def test_cli_emits_workflow_commands(self, tmp_path, capsys):
+        self._dirty_tree(tmp_path)
+        main(["--root", str(tmp_path), "--format", "github", "src"])
+        out = capsys.readouterr().out
+        assert "::error file=src/dirty.py,line=2," in out
+        assert "title=CAS001::" in out
+        assert "cascade-lint: 1 finding(s)" in out
+
+    def test_baselined_findings_annotate_as_notices(self, tmp_path,
+                                                    capsys):
+        self._dirty_tree(tmp_path)
+        assert main(["--root", str(tmp_path), "--write-baseline",
+                     "src"]) == 0
+        capsys.readouterr()
+        main(["--root", str(tmp_path), "--format", "github", "src"])
+        out = capsys.readouterr().out
+        assert "::notice file=src/dirty.py" in out
+        assert "title=CAS001 [baselined]::" in out
+
+    def test_message_escaping(self):
+        f = Finding("CAS999", "a.py", 3, 0, "50% of\nlines")
+        line = _render_github(f)
+        assert "%25" in line and "%0A" in line
+        assert "\n" not in line
+
+    def test_json_alias_still_works(self, tmp_path, capsys):
+        self._dirty_tree(tmp_path)
+        main(["--root", str(tmp_path), "--json", "src"])
+        out = capsys.readouterr().out
+        assert out.lstrip().startswith("[") and '"CAS001"' in out
 
 
 # ---------------------------------------------------------------------------
