@@ -30,9 +30,10 @@ def main() -> None:
     from benchmarks import (async_throughput, batched_throughput,
                             case_analysis, cost_equilibrium,
                             distribution_shift, kernel_levels,
-                            pipelined_throughput, pool_throughput,
-                            prefill_cost, regret, roofline_report,
-                            sharded_throughput, table1, tradeoff_curves)
+                            load_harness, pipelined_throughput,
+                            pool_throughput, prefill_cost, regret,
+                            roofline_report, sharded_throughput, table1,
+                            tradeoff_curves)
 
     quick = args.quick
     n = args.samples or (800 if quick else 1000)
@@ -121,6 +122,15 @@ def main() -> None:
         t0 = time.time()
         cost_equilibrium.run(quick=quick)
         record("cost_equilibrium", t0, "see artifacts")
+
+    if "load" not in args.skip:
+        t0 = time.time()
+        lh = load_harness.run(samples=min(n, 1024), seed=args.seed,
+                              quick=quick)
+        record("load_harness", t0,
+               f"goodput_over={lh['headline_goodput_over']:.0f}/s_"
+               f"p99_under={lh['headline_p99_under_s'] * 1e3:.0f}ms_"
+               f"p99_over={lh['headline_p99_over_s'] * 1e3:.0f}ms")
 
     if "prefill" not in args.skip:
         t0 = time.time()

@@ -4,6 +4,8 @@ Public surface: the sequential reference ``OnlineCascade``, the
 serving-scale ``BatchedCascadeEngine`` (batched / sharded / async /
 pipelined), the deferral-gate math, and the expert implementations.
 """
+from repro.core.admission import (
+    CascadeFrontEnd, StreamRecord, serve_requests)
 from repro.core.batched import BatchedCascadeEngine
 from repro.core.cascade import (
     CascadeConfig, LevelSpec, OnlineCascade, default_cascade_config,
@@ -21,5 +23,6 @@ __all__ = [
     "reexploration_floor",
     "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
     "kernel_cascade_config", "BatchedCascadeEngine",
+    "CascadeFrontEnd", "StreamRecord", "serve_requests",
     "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",
 ]

@@ -1,0 +1,337 @@
+"""Continuous-batching admission over the batched cascade engine.
+
+The paper's setting is a *stream*: queries arrive over time, each with
+its own length, and the cascade answers them as they come.  The engines
+of PRs 1-8 serve a fixed lockstep batch — S lanes that all start at
+tick 0 and end together — which models a benchmark, not traffic.  This
+module adds the serving front-end: requests arrive on a seeded schedule
+(data/streams.py ``Request``), claim a free lane from the engine's
+fixed-capacity lane pool, run to completion at their own pace, and
+retire, recycling the lane for the next arrival.  Shapes stay static —
+occupancy is expressed through the engine's existing partial-tick
+masking (``lanes=`` names which physical lanes a tick's positions
+occupy), so lane recycling never recompiles anything.
+
+The lane lifecycle, one tick of ``step()``:
+
+1. **retire** — streams whose last item routed on an earlier tick free
+   their lanes (a lane serves its stream's final item at tick u and is
+   reusable from tick u+1);
+2. **admit** — queued requests claim free lanes, FCFS in arrival order,
+   lowest free lane first.  Admission depends only on the schedule and
+   the lane budget — never on engine outputs — so the admission log is
+   deterministic across workers, pipeline depth, delay and mesh;
+3. **serve** — the occupied lanes' next items form the tick, submitted
+   with ``lanes=`` (physical lanes), ``stream_ids=`` (each stream's own
+   rid) and ``stream_ticks=`` (each stream's own 1-based item counter).
+   The RNG rekeying is the bitwise heart of the design: stream r's j-th
+   item draws ``tick_rngs(seed, r, j)`` no matter which lane or global
+   tick serves it, so its per-item randomness is exactly what a
+   dedicated lane (or the sequential reference with ``stream_id = r``)
+   would have drawn;
+4. **idle** — a tick with arrivals pending but no occupants still calls
+   the engine with an EMPTY tick, which advances the engine clock and
+   the D-tick commit deadlines: one clock covers busy and idle time, so
+   the async queue's bounded-delay contract is unchanged by admission.
+
+Overload policy: ``admission="queue"`` queues arrivals without bound;
+``admission="shed"`` drops an arrival (recorded, never served) when
+every lane is busy or spoken for and the wait queue already holds
+``queue_limit`` requests.
+
+Under online learning, co-scheduled streams still share the cascade —
+that is the paper's point — so a staggered run matches its dedicated
+lane run only in the draws, not the params.  The frozen regime
+(``hard_budget=0``: no jumps, no expert calls, no updates) removes the
+coupling, and there the per-stream trajectory is bitwise the sequential
+reference's (tests/test_admission.py pins both this and the lockstep
+all-at-t=0 schedule, which is bitwise the classic run even while
+learning).
+"""
+from __future__ import annotations
+
+import time
+from bisect import bisect_right
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class StreamRecord:
+    """Per-stream serving record (admit tick, answers, time-to-answer).
+
+    Ticks are engine ticks (1-based; idle ticks count).  ``commit_ticks``
+    are the engine ticks this stream's expert annotations committed at,
+    recovered from the engine's ``commit_log`` through the lane-occupancy
+    history."""
+    rid: int
+    arrival: int                  # tick the request became admissible
+    n_items: int
+    admit: int = -1               # tick of first served item (-1: never)
+    lane: int = -1                # physical lane served on (-1: never)
+    done: int = -1                # tick the final item routed
+    retired: int = -1             # tick the lane was freed again
+    shed: bool = False
+    items_done: int = 0           # outputs consumed so far
+    expert_calls: int = 0
+    cost_units: float = 0.0
+    predictions: List[int] = field(default_factory=list)
+    levels: List[int] = field(default_factory=list)
+    commit_ticks: List[int] = field(default_factory=list)
+    arrival_wall: float = 0.0     # load-harness wall clocks (0 = unset)
+    answer_wall: float = 0.0
+
+    @property
+    def answered(self) -> bool:
+        return self.items_done == self.n_items and self.n_items > 0
+
+    def time_to_answer(self) -> int:
+        """Ticks from (effective) arrival to the final item's route,
+        inclusive; -1 while unanswered.  Queueing delay included."""
+        if self.done < 0:
+            return -1
+        return self.done - max(self.arrival, 1) + 1
+
+    def queue_delay(self) -> int:
+        """Ticks spent waiting for a lane; -1 if never admitted."""
+        if self.admit < 0:
+            return -1
+        return self.admit - max(self.arrival, 1)
+
+
+class CascadeFrontEnd:
+    """Dynamic lane admission/retirement over a ``BatchedCascadeEngine``.
+
+    The engine's ``n_streams`` is the lane budget.  The front-end owns
+    the clock: every ``step()`` is one engine tick (idle ticks submit an
+    empty tick so commit deadlines keep counting).  It drives the
+    pipelined path (``submit_tick``/``drain``) when the engine has
+    ``pipeline_depth > 0`` and maps late-resolving outputs back through
+    each output's tick number, so records are identical for any P.
+    """
+
+    def __init__(self, engine, stream, *, admission: str = "queue",
+                 queue_limit: int = 0):
+        if admission not in ("queue", "shed"):
+            raise ValueError(
+                f"admission must be 'queue' or 'shed', got {admission!r}")
+        if queue_limit < 0:
+            raise ValueError("queue_limit must be >= 0")
+        self.engine = engine
+        self.stream = stream
+        self.admission = admission
+        self.queue_limit = queue_limit
+        L = engine.n_streams
+        self._occupant: List[Optional[int]] = [None] * L  # lane -> rid
+        self._free: List[int] = list(range(L))            # sorted
+        self._queue: deque = deque()                      # waiting rids
+        self._cursor: Dict[int, int] = {}                 # rid -> next item
+        self._requests: Dict[int, "object"] = {}          # rid -> Request
+        self.records: Dict[int, StreamRecord] = {}
+        # engine tick -> (lanes, rids) of the tick's positions, kept
+        # until the tick's output resolves (pipelined outputs arrive up
+        # to P ticks late)
+        self._tick_layout: Dict[int, tuple] = {}
+        # per-lane occupancy intervals [(start_tick, end_tick, rid)] for
+        # commit attribution: a commit_log entry (submit_t, lane, c)
+        # belongs to whichever stream held `lane` at submit_t
+        self._lane_history: List[List[tuple]] = [[] for _ in range(L)]
+        self._commit_seen = 0
+        self.stats = {"offered": 0, "admitted": 0, "shed": 0,
+                      "retired": 0, "ticks": 0, "idle_ticks": 0,
+                      "occupancy_sum": 0}
+        # (rid, admit_tick, lane) in admission order — the determinism
+        # pin compares this log across engine knobs
+        self.admission_log: List[tuple] = []
+
+    # -- arrivals --------------------------------------------------------
+    def offer(self, request) -> bool:
+        """Present one arrival; False when shed under the shed policy."""
+        self.stats["offered"] += 1
+        rec = StreamRecord(rid=request.rid, arrival=request.arrival,
+                           n_items=len(request.items))
+        self.records[request.rid] = rec
+        if (self.admission == "shed"
+                and len(self._queue) >= len(self._free) + self.queue_limit):
+            rec.shed = True
+            self.stats["shed"] += 1
+            return False
+        self._requests[request.rid] = request
+        self._cursor[request.rid] = 0
+        self._queue.append(request.rid)
+        return True
+
+    # -- lifecycle -------------------------------------------------------
+    def occupied(self) -> List[int]:
+        """Occupied physical lanes, ascending."""
+        return [s for s, r in enumerate(self._occupant) if r is not None]
+
+    def active(self) -> bool:
+        """True while any stream is queued or holds a lane."""
+        return bool(self._queue) or any(
+            r is not None for r in self._occupant)
+
+    def _retire(self, t_next: int) -> None:
+        for lane, rid in enumerate(self._occupant):
+            if rid is None:
+                continue
+            if self._cursor[rid] >= self.records[rid].n_items:
+                rec = self.records[rid]
+                rec.retired = t_next
+                self._occupant[lane] = None
+                self._lane_history[lane][-1] = (
+                    self._lane_history[lane][-1][0], t_next - 1, rid)
+                self._free.append(lane)
+                self.stats["retired"] += 1
+        self._free.sort()
+
+    def _admit(self, t_next: int) -> None:
+        while self._queue and self._free:
+            rid = self._queue.popleft()
+            lane = self._free.pop(0)
+            self._occupant[lane] = rid
+            rec = self.records[rid]
+            rec.admit = t_next
+            rec.lane = lane
+            self._lane_history[lane].append((t_next, None, rid))
+            self.admission_log.append((rid, t_next, lane))
+            self.stats["admitted"] += 1
+
+    def step(self) -> List[dict]:
+        """One engine tick: retire, admit, serve (or idle).  Returns the
+        outputs the engine resolved this tick (possibly older ticks')."""
+        t_next = self.engine.t + 1
+        self._retire(t_next)
+        self._admit(t_next)
+        lanes, rids, idxs, ticks = [], [], [], []
+        for lane, rid in enumerate(self._occupant):
+            if rid is None:
+                continue
+            j = self._cursor[rid]
+            lanes.append(lane)
+            rids.append(rid)
+            idxs.append(self._requests[rid].items[j])
+            ticks.append(j + 1)     # the stream's own 1-based item tick
+            self._cursor[rid] = j + 1
+            if j + 1 == self.records[rid].n_items:
+                self.records[rid].done = t_next
+        docs = [self.stream.docs[i] for i in idxs]
+        self.stats["ticks"] += 1
+        self.stats["occupancy_sum"] += len(lanes)
+        if not lanes:
+            self.stats["idle_ticks"] += 1
+        self._tick_layout[t_next] = (lanes, rids)
+        if self.engine.pipeline_depth:
+            outs = self.engine.submit_tick(
+                idxs, docs, lanes=lanes, stream_ids=rids,
+                stream_ticks=ticks)
+        else:
+            outs = [self.engine.process_tick(
+                idxs, docs, lanes=lanes, stream_ids=rids,
+                stream_ticks=ticks)]
+        for out in outs:
+            self._consume(out)
+        self._consume_commits()
+        return outs
+
+    def _consume(self, out: dict) -> None:
+        _, rids = self._tick_layout.pop(out["tick"])
+        now = time.time()
+        for pos, rid in enumerate(rids):
+            rec = self.records[rid]
+            rec.predictions.append(int(out["predictions"][pos]))
+            rec.levels.append(int(out["levels"][pos]))
+            rec.expert_calls += int(out["expert_called"][pos])
+            rec.cost_units += float(out["cost_units"][pos])
+            rec.items_done += 1
+            if rec.items_done == rec.n_items:
+                rec.answer_wall = now
+
+    def _consume_commits(self) -> None:
+        log = self.engine.commit_log
+        if log is None:
+            return
+        for sub_t, lane, commit_t in log[self._commit_seen:]:
+            spans = self._lane_history[lane]
+            # rightmost span starting at/before sub_t holds the occupant
+            k = bisect_right([sp[0] for sp in spans], sub_t) - 1
+            if k >= 0:
+                self.records[spans[k][2]].commit_ticks.append(commit_t)
+        self._commit_seen = len(log)
+
+    def finish(self) -> None:
+        """Stream end: drain the route ring, flush pending annotations,
+        attribute the late commits, retire the survivors."""
+        for out in self.engine.drain():
+            self._consume(out)
+        self.engine.flush()
+        self._consume_commits()
+        self._retire(self.engine.t + 1)
+
+    def serve(self, requests: Sequence, max_ticks: Optional[int] = None
+              ) -> Dict[int, StreamRecord]:
+        """Tick-driven serve loop over a full schedule: offer each
+        request at its arrival tick, step until everything retired (or
+        ``max_ticks``), then ``finish()``.  Deterministic in the
+        schedule — nothing here reads an engine output."""
+        pending = deque(sorted(requests,
+                               key=lambda r: (max(r.arrival, 1), r.rid)))
+        while pending or self.active():
+            if max_ticks is not None and self.engine.t >= max_ticks:
+                break
+            t_next = self.engine.t + 1
+            # retire BEFORE offering so a shed decision sees the lanes
+            # this tick actually frees (step()'s own retire is then a
+            # no-op); idle ticks — arrivals pending, nothing occupied —
+            # still step, keeping the clock and commit deadlines moving
+            self._retire(t_next)
+            while pending and max(pending[0].arrival, 1) <= t_next:
+                self.offer(pending.popleft())
+            self.step()
+        self.finish()
+        return self.records
+
+    # -- metrics ---------------------------------------------------------
+    def metrics(self) -> dict:
+        """Serving summary: answered counts, tick-latency percentiles,
+        occupancy, plus a base-corpus prediction array (-1 where an item
+        was shed/unserved) for parity checks against lockstep runs."""
+        recs = list(self.records.values())
+        answered = [r for r in recs if r.answered]
+        ttas = np.array([r.time_to_answer() for r in answered], np.int64)
+        delays = np.array([r.queue_delay() for r in answered], np.int64)
+        preds = np.full(len(self.stream), -1, np.int64)
+        for rid, rec in self.records.items():
+            if rec.shed:
+                continue
+            items = self._requests[rid].items
+            for j, p in enumerate(rec.predictions):
+                preds[items[j]] = p
+        ticks = max(self.stats["ticks"], 1)
+        return {
+            "requests": len(recs),
+            "answered": len(answered),
+            "shed": self.stats["shed"],
+            "items_done": int(sum(r.items_done for r in recs)),
+            "tta_p50": float(np.percentile(ttas, 50)) if ttas.size else 0.0,
+            "tta_p99": float(np.percentile(ttas, 99)) if ttas.size else 0.0,
+            "queue_delay_mean": (float(delays.mean())
+                                 if delays.size else 0.0),
+            "occupancy_mean": self.stats["occupancy_sum"] / ticks,
+            "idle_ticks": self.stats["idle_ticks"],
+            "ticks": self.stats["ticks"],
+            "predictions": preds,
+        }
+
+
+def serve_requests(engine, stream, requests, *, admission: str = "queue",
+                   queue_limit: int = 0) -> "CascadeFrontEnd":
+    """One-call convenience: build the front-end, serve the schedule to
+    completion, return the front-end (records + metrics inside)."""
+    fe = CascadeFrontEnd(engine, stream, admission=admission,
+                         queue_limit=queue_limit)
+    fe.serve(requests)
+    return fe

@@ -311,6 +311,8 @@ class _PendingTick:
     cache_rngs: list              # per-level np generators (lane-0 tick)
     committed: int = 0            # lanes already committed (prefix)
     lane_cache_rngs: Optional[list] = None   # per called lane, per level
+    lanes: Optional[np.ndarray] = None  # physical lane per tick position
+                                        # (occupancy ticks; None = arange)
     wall: float = 0.0             # wall-clock at submit (latency stats)
     feats_dev: Optional[list] = None   # device copies of feats, uploaded
                                        # once and shared by the record's
@@ -343,6 +345,8 @@ class _InFlightTick:
     version: int                  # engine commit counter at dispatch
     beta_after: List[float]       # per-level beta after this tick's decay
     lane_cache: Optional[list] = None   # per-lane cache rngs (per_lane)
+    lanes: Optional[np.ndarray] = None  # physical lane per tick position
+                                        # (occupancy ticks; None = arange)
     u_jump_raw: Optional[np.ndarray] = None  # (nlev, S) raw jump draws,
                                              # kept only under the
                                              # determinism sanitizer
@@ -360,7 +364,8 @@ class BatchedCascadeEngine:
                  *, updates_per_tick: str = "single", mesh=None,
                  max_delay: int = 0, pipeline_depth: int = 0,
                  per_lane: bool = False,
-                 history_limit: Optional[int] = None):
+                 history_limit: Optional[int] = None,
+                 commit_log: Optional[bool] = None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if updates_per_tick not in ("single", "scaled"):
@@ -440,13 +445,18 @@ class BatchedCascadeEngine:
         # per-lane annotation-commit accounting: ages in ticks, latencies
         # in seconds, aggregated over every committed lane (both commit
         # modes).  commit_log records (submit_tick, lane, commit_tick)
-        # per lane, but ONLY in the unbounded-diagnostics mode
-        # (history_limit=None): with bounded or disabled history the log
-        # stays off too, so long-serving memory stays bounded (the
-        # queue-drain invariant tests and pool_throughput read it)
+        # per lane.  By default (commit_log=None) it follows the history
+        # mode: on in the unbounded-diagnostics mode (history_limit=None),
+        # off with bounded/disabled history so long-serving memory stays
+        # bounded (the queue-drain invariant tests and pool_throughput
+        # read it).  commit_log=True/False overrides that coupling — the
+        # admission front-end needs per-lane commit ticks for its
+        # per-stream records while running with history_limit=0
+        # (core/admission.py consumes the log with a cursor).
         self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
-        self.commit_log: Optional[list] = (
-            [] if history_limit is None else None)
+        if commit_log is None:
+            commit_log = history_limit is None
+        self.commit_log: Optional[list] = [] if commit_log else None
         # route pipeline: dispatched-but-unresolved ticks (<= pipeline_depth
         # deep), the speculative route-time beta/item counters that track
         # the resolve-time state through the identical recurrence, and the
@@ -593,7 +603,9 @@ class BatchedCascadeEngine:
         return np.asarray(ticket.result(), np.int32)
 
     # -- one lockstep tick ----------------------------------------------
-    def process_tick(self, indices: Sequence[int], docs) -> dict:
+    def process_tick(self, indices: Sequence[int], docs, *,
+                     lanes=None, stream_ids=None,
+                     stream_ticks=None) -> dict:
         """Advance every lane by one item.  len(docs) may be < n_streams
         on the final partial tick of a stream.
 
@@ -603,16 +615,34 @@ class BatchedCascadeEngine:
         Pipelined serving (results returned up to P ticks late, route
         passes overlapped) is driven through ``submit_tick``/
         ``resolve_tick``/``drain`` instead; mixing the two while ticks
-        are in flight is an error."""
+        are in flight is an error.
+
+        ``lanes``/``stream_ids``/``stream_ticks`` are the occupancy
+        extension used by the continuous-batching front-end
+        (core/admission.py): ``lanes`` names the physical lane each tick
+        position occupies (strictly increasing, defaults to
+        ``arange(S)`` — the lockstep identity), and
+        ``stream_ids[s]``/``stream_ticks[s]`` replace ``(s, t)`` as the
+        position's RNG tick key so a dynamically-admitted stream draws
+        the exact per-item randomness it would have drawn in a dedicated
+        lane (see core/rng.py).  All three default to the lockstep
+        behaviour bitwise.  An EMPTY tick (S == 0) is legal and advances
+        the tick clock — including the D-tick commit deadlines — without
+        dispatching any forward; the front-end uses it for idle ticks so
+        one clock covers busy and idle time."""
         if self._ring:
             raise RuntimeError(
                 "route pipeline has in-flight ticks: resolve_tick()/"
                 "drain() them first, or drive the engine entirely "
                 "through submit_tick()")
-        return self._route_resolve(self._route_dispatch(indices, docs))
+        return self._route_resolve(self._route_dispatch(
+            indices, docs, lanes=lanes, stream_ids=stream_ids,
+            stream_ticks=stream_ticks))
 
     # -- pipelined route driver (stage A / stage B) ----------------------
-    def submit_tick(self, indices: Sequence[int], docs) -> List[dict]:
+    def submit_tick(self, indices: Sequence[int], docs, *,
+                    lanes=None, stream_ids=None,
+                    stream_ticks=None) -> List[dict]:
         """Dispatch one tick into the route pipeline (stage A).
 
         Returns the output dicts of every tick the call resolved, oldest
@@ -639,7 +669,9 @@ class BatchedCascadeEngine:
             # guaranteed stale — resolve past the commit first
             self.pipeline_stats["update_fences"] += 1
             outs.append(self._route_resolve(self._ring.popleft()))
-        self._ring.append(self._route_dispatch(indices, docs))
+        self._ring.append(self._route_dispatch(
+            indices, docs, lanes=lanes, stream_ids=stream_ids,
+            stream_ticks=stream_ticks))
         while len(self._ring) > self.pipeline_depth:
             outs.append(self._route_resolve(self._ring.popleft()))
         return outs
@@ -688,19 +720,39 @@ class BatchedCascadeEngine:
                                          self._put_lane(xb))
         return handles, xb
 
-    def _route_dispatch(self, indices: Sequence[int],
-                        docs) -> _InFlightTick:
+    def _route_dispatch(self, indices: Sequence[int], docs, *,
+                        lanes=None, stream_ids=None,
+                        stream_ticks=None) -> _InFlightTick:
         """Stage A: draws, masks, level-0 featurize + async dispatch.
 
         Everything here is either deterministic in the tick number
         (pre-split RNG, the route-time beta recurrence) or covered by a
         fence/staleness check (budget bit, level-0 params) — see the
-        module docstring's speculation discipline."""
+        module docstring's speculation discipline.  The occupancy
+        arguments (``lanes``/``stream_ids``/``stream_ticks``, see
+        ``process_tick``) only change which physical lane each position
+        accounts to and which (stream, tick) key seeds its draws — the
+        route itself is position-indexed and identical."""
         cfg = self.cfg
         nlev = len(self.levels)
         S = len(docs)
         if S > self.n_streams:
             raise ValueError(f"tick of {S} items > n_streams={self.n_streams}")
+        if lanes is not None:
+            lanes = np.asarray(lanes, np.int64)
+            if lanes.shape != (S,):
+                raise ValueError(
+                    f"lanes must have one entry per tick position: "
+                    f"got shape {lanes.shape} for a tick of {S}")
+            if S and (lanes[0] < 0 or lanes[-1] >= self.n_streams
+                      or np.any(np.diff(lanes) <= 0)):
+                raise ValueError(
+                    "lanes must be strictly increasing physical lane ids "
+                    f"in [0, n_streams={self.n_streams})")
+        if stream_ids is not None and len(stream_ids) != S:
+            raise ValueError("stream_ids must have one entry per position")
+        if stream_ticks is not None and len(stream_ticks) != S:
+            raise ValueError("stream_ticks must have one entry per position")
         self.t += 1
         t = self.t
         self.pipeline_stats["submitted"] += 1
@@ -719,7 +771,13 @@ class BatchedCascadeEngine:
         # per-item rule); per-tick mode only needs the lane-0 purpose
         lane_cache = [] if self.per_lane else None
         for s in range(S):
-            r = tick_rngs(cfg.seed, s, t, nlev)
+            # a dynamically-admitted stream keeps its OWN (stream id,
+            # local tick) key regardless of which lane or global tick
+            # serves it — this is what makes its per-item draws identical
+            # to the dedicated-lane run (tests/test_admission.py pins it)
+            sid = s if stream_ids is None else int(stream_ids[s])
+            lt = t if stream_ticks is None else int(stream_ticks[s])
+            r = tick_rngs(cfg.seed, sid, lt, nlev)
             u_jump[:, s] = r.jump.random(nlev)
             u_act[:, s] = r.action.random(nlev).astype(np.float32)
             if lane_cache is not None:
@@ -766,6 +824,7 @@ class BatchedCascadeEngine:
             cache_rngs=cache_rngs, feats_cache=feats_cache, sel0=sel0,
             xb0=xb0, handles=handles, version=self._state_version,
             beta_after=list(self._route_beta), lane_cache=lane_cache,
+            lanes=lanes,
             u_jump_raw=u_jump if _san.determinism_on() else None)
 
     def _route_resolve(self, rec: _InFlightTick) -> dict:
@@ -933,6 +992,7 @@ class BatchedCascadeEngine:
                 lane_cache_rngs=(
                     [rec.lane_cache[s] for s in sel_c]
                     if self.per_lane else None),
+                lanes=rec.lanes,
                 wall=time.time())
 
         if prec is not None:
@@ -955,8 +1015,8 @@ class BatchedCascadeEngine:
         for lvl, b in zip(self.levels, rec.beta_after):
             lvl.beta = b
 
-        # per-stream accounting
-        lanes = np.arange(S)
+        # per-stream accounting, at the physical lanes this tick occupied
+        lanes = np.arange(S) if rec.lanes is None else rec.lanes
         J_t = cfg.mu * cost_out
         self.expert_calls[lanes] += called.astype(np.int64)
         self.total_cost[lanes] += cost_out
@@ -984,6 +1044,9 @@ class BatchedCascadeEngine:
             # late-resolving outputs back to their submission)
             "indices": np.asarray(rec.indices, np.int64),
             "tick": t,
+            # physical lane per position (the occupancy identity when the
+            # tick was submitted without lanes=)
+            "lanes": lanes.copy(),
             "predictions": predictions.astype(np.int64),
             "levels": levels_out,
             "expert_called": called,
@@ -1023,13 +1086,20 @@ class BatchedCascadeEngine:
 
     def _record_commit(self, rec: _PendingTick, lanes, t: int) -> None:
         """Aggregate per-lane commit age/latency stats (and the per-lane
-        commit log when history is enabled)."""
+        commit log when enabled).  ``lanes`` are tick POSITIONS; the log
+        records the physical lane each position occupied at submit, so
+        readers (the admission front-end's per-stream records) can map a
+        commit back to the stream that was on that lane at ``rec.t``."""
         n = len(lanes)
         self.commit_stats["lanes"] += n
         self.commit_stats["age_sum"] += n * (t - rec.t)
         self.commit_stats["wall_sum"] += n * (time.time() - rec.wall)
         if self.commit_log is not None:
-            self.commit_log.extend((rec.t, int(s), t) for s in lanes)
+            if rec.lanes is None:
+                self.commit_log.extend((rec.t, int(s), t) for s in lanes)
+            else:
+                self.commit_log.extend(
+                    (rec.t, int(rec.lanes[int(s)]), t) for s in lanes)
 
     def _commit(self, rec: _PendingTick, t: Optional[int] = None) -> None:
         """Apply a routed tick's expert annotations: ring-buffer scatter

@@ -1,7 +1,11 @@
 """Simulated benchmark streams and hashing featurizers."""
 from repro.data.features import hash_bow, hash_ids
 from repro.data.streams import (
-    BENCHMARKS, Stream, StreamSpec, benchmark_spec, make_stream)
+    BENCHMARKS, Request, Stream, StreamSpec, arrival_schedule,
+    benchmark_spec, burst_requests, lockstep_requests, make_stream,
+    poisson_requests)
 
 __all__ = ["StreamSpec", "Stream", "BENCHMARKS", "make_stream",
-           "benchmark_spec", "hash_bow", "hash_ids"]
+           "benchmark_spec", "hash_bow", "hash_ids", "Request",
+           "arrival_schedule", "lockstep_requests", "poisson_requests",
+           "burst_requests"]

@@ -97,7 +97,11 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                          mesh=None, updates_per_tick: str = "single",
                          async_delay: int = 0, pipeline_depth: int = 0,
                          expert_workers: int = 1, per_lane: bool = False,
-                         ladder: str = "default", trace_out: str = ""):
+                         ladder: str = "default", trace_out: str = "",
+                         arrivals: str = "none", lane_budget: int = 0,
+                         admission: str = "queue", queue_limit: int = 0,
+                         arrival_rate: float = 1.0, request_len: int = 8,
+                         burst_size: int = 8):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -115,7 +119,14 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     sizes the expert annotation pool (sharded ``submit_many`` tickets),
     and ``per_lane=True`` commits each lane's annotation on the spread
     sub-deadline schedule with per-item updates (core/batched.py
-    per-lane commit mode — pair it with the pool).  ``ladder`` picks the
+    per-lane commit mode — pair it with the pool).  ``arrivals`` other
+    than "none" switches to the continuous-batching front-end
+    (core/admission.py): requests arrive on the named seeded schedule
+    (data/streams.py), claim lanes from a pool of ``lane_budget``
+    (default ``batch``) and retire at their own length, with
+    ``admission`` = "queue" (unbounded FCFS wait) or "shed" (drop
+    arrivals beyond ``queue_limit`` waiting requests); the report adds
+    per-stream time-to-answer percentiles.  ``ladder`` picks the
     level stack: "default" = lr -> tinytf (dense jnp students);
     "kernel" = lr -> tinytf_flash -> ssm with the upper levels' batched
     forwards routed through the Pallas kernels at full default spec
@@ -138,14 +149,25 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
         cfg = kernel_cascade_config(n_classes=stream.spec.n_classes,
                                     mu=mu, seed=seed,
                                     expert_cost=expert.cost, **spec_kw)
+    lanes_n = lane_budget or batch
     # history_limit=0: the serving loop only reads aggregate metrics, so
-    # per-item history would grow without bound on long streams
-    engine = BatchedCascadeEngine(cfg, expert, n_streams=batch, mesh=mesh,
+    # per-item history would grow without bound on long streams.  The
+    # front-end path keeps the per-lane commit log on top of that — its
+    # per-stream records need the commit ticks
+    engine = BatchedCascadeEngine(cfg, expert, n_streams=lanes_n,
+                                  mesh=mesh,
                                   updates_per_tick=updates_per_tick,
                                   max_delay=async_delay,
                                   pipeline_depth=pipeline_depth,
                                   per_lane=per_lane,
-                                  history_limit=0)
+                                  history_limit=0,
+                                  commit_log=arrivals != "none" or None)
+    if arrivals != "none":
+        return _serve_frontend(
+            engine, stream, arrivals, admission=admission,
+            queue_limit=queue_limit, arrival_rate=arrival_rate,
+            request_len=request_len, burst_size=burst_size, seed=seed,
+            trace_out=trace_out)
     t0 = time.time()
     metrics = engine.run(stream, log_every=log_every)
     dt = time.time() - t0
@@ -178,6 +200,55 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     print(f"level fractions: "
           f"{[round(f, 3) for f in metrics['level_fractions']]}")
     return metrics
+
+
+def _serve_frontend(engine, stream, arrivals: str, *, admission: str,
+                    queue_limit: int, arrival_rate: float,
+                    request_len: int, burst_size: int, seed: int,
+                    trace_out: str = ""):
+    """Continuous-batching serving path: seeded arrival schedule through
+    the admission front-end, with a per-stream latency report."""
+    from repro.core import CascadeFrontEnd
+    from repro.data import arrival_schedule
+    if arrivals == "lockstep":
+        kw = {"n_lanes": engine.n_streams}
+    elif arrivals == "poisson":
+        kw = {"rate": arrival_rate, "mean_len": request_len, "seed": seed}
+    else:
+        kw = {"burst": burst_size, "mean_len": request_len, "seed": seed,
+              "every": max(1, int(round(burst_size / arrival_rate)))}
+    requests = arrival_schedule(arrivals, len(stream), **kw)
+    fe = CascadeFrontEnd(engine, stream, admission=admission,
+                         queue_limit=queue_limit)
+    t0 = time.time()
+    fe.serve(requests)
+    dt = time.time() - t0
+    _save_trace(engine, trace_out)
+    m = fe.metrics()
+    served = m["predictions"] >= 0
+    acc = (float(np.mean(m["predictions"][served]
+                         == stream.labels[served]))
+           if served.any() else 0.0)
+    cs = engine.commit_stats
+    print(f"\nserved {m['items_done']} items of {m['requests']} "
+          f"requests in {dt:.1f}s over {m['ticks']} ticks "
+          f"(arrivals={arrivals}, lanes={engine.n_streams}, "
+          f"admission={admission})")
+    print(f"answered={m['answered']} shed={m['shed']}  "
+          f"goodput={m['items_done'] / max(dt, 1e-9):.0f} items/s  "
+          f"occupancy={m['occupancy_mean']:.2f}/{engine.n_streams} "
+          f"(idle ticks={m['idle_ticks']})")
+    print(f"time-to-answer p50={m['tta_p50']:.0f} "
+          f"p99={m['tta_p99']:.0f} ticks  "
+          f"mean queue delay={m['queue_delay_mean']:.2f} ticks")
+    if cs["lanes"]:
+        print(f"annotation commits: {cs['lanes']} lanes, "
+              f"mean age {cs['age_sum'] / cs['lanes']:.2f} ticks")
+    print(f"accuracy={acc:.4f} over served items  "
+          f"expert_calls={engine.expert_calls_total}")
+    m["accuracy"] = acc
+    m["records"] = fe.records
+    return m
 
 
 def _save_trace(engine, trace_out: str) -> None:
@@ -366,6 +437,37 @@ def main():
                          "instead of D), in strict (tick, lane) order; "
                          "results are bitwise invariant to worker "
                          "count/latency")
+    ap.add_argument("--arrivals", default="none",
+                    choices=["none", "lockstep", "poisson", "burst"],
+                    help="continuous-batching front-end (batched "
+                         "engine, core/admission.py): requests arrive "
+                         "on this seeded schedule, claim a lane from "
+                         "the pool, run to their own length and retire; "
+                         "'none' = classic lockstep batch serving, "
+                         "'lockstep' = all requests at t=0 (bitwise the "
+                         "classic run), 'poisson'/'burst' = open-loop "
+                         "staggered traffic (data/streams.py)")
+    ap.add_argument("--lane-budget", type=int, default=0,
+                    help="lane-pool capacity for --arrivals serving "
+                         "(concurrent streams); 0 = use --batch")
+    ap.add_argument("--admission", default="queue",
+                    choices=["queue", "shed"],
+                    help="overload policy for --arrivals serving: "
+                         "'queue' waits arrivals FCFS without bound; "
+                         "'shed' drops arrivals beyond --queue-limit "
+                         "waiting requests (dropped requests are "
+                         "recorded, never served)")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="waiting-request capacity under --admission "
+                         "shed (beyond the free lanes)")
+    ap.add_argument("--arrival-rate", type=float, default=1.0,
+                    help="offered load for --arrivals poisson/burst, in "
+                         "requests per tick")
+    ap.add_argument("--request-len", type=int, default=8,
+                    help="mean request length in items (geometric) for "
+                         "--arrivals poisson/burst")
+    ap.add_argument("--burst-size", type=int, default=8,
+                    help="requests per burst for --arrivals burst")
     ap.add_argument("--microbatch", type=int, default=16,
                     help="expert micro-batch size (sequential engine): "
                          "the probe/replay pass batches this many "
@@ -419,7 +521,14 @@ def main():
                              expert_workers=args.expert_workers,
                              per_lane=args.per_lane_commit,
                              ladder=args.ladder,
-                             trace_out=args.trace_out)
+                             trace_out=args.trace_out,
+                             arrivals=args.arrivals,
+                             lane_budget=args.lane_budget,
+                             admission=args.admission,
+                             queue_limit=args.queue_limit,
+                             arrival_rate=args.arrival_rate,
+                             request_len=args.request_len,
+                             burst_size=args.burst_size)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed,

@@ -188,3 +188,56 @@ def assert_run_parity(ref, m_ref, new, m_new, *, state="bitwise",
             raise AssertionError(
                 f"{err}\n[cascade-san] {div.describe()}") from err
         raise
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching front-end (core/admission.py) helpers
+# ---------------------------------------------------------------------------
+def frontend_engine(cfg, stream, lane_budget, expert_kw=None, **kw):
+    """A batched engine sized as a lane pool for the admission
+    front-end, with the per-lane commit log on (the front-end's
+    per-stream records consume it)."""
+    return batched_engine(cfg, stream, n_streams=lane_budget,
+                          expert_kw=expert_kw, commit_log=True, **kw)
+
+
+def run_frontend(engine, stream, requests, **fe_kw):
+    """Serve an arrival schedule through the admission front-end under
+    the determinism sanitizer; returns ``(frontend, metrics)`` — the
+    metrics dict carries base-corpus ``predictions`` so it drops
+    straight into ``assert_run_parity`` against a lockstep run."""
+    from repro.core import CascadeFrontEnd
+    fe = CascadeFrontEnd(engine, stream, **fe_kw)
+    with _san.determinism_trace():
+        fe.serve(requests)
+    return fe, fe.metrics()
+
+
+def run_frontend_pair(ref, engine, stream, requests, **fe_kw):
+    """Lockstep reference run + front-end run over one trace window:
+    ``(m_ref, frontend, m_fe)``, comparable via ``assert_run_parity``
+    (the all-at-t=0 schedule makes tick compositions identical, so
+    per-tick histories and traces line up tick-for-tick)."""
+    from repro.core import CascadeFrontEnd
+    with _san.determinism_trace():
+        m_ref = ref.run(stream)
+        fe = CascadeFrontEnd(engine, stream, **fe_kw)
+        fe.serve(requests)
+    return m_ref, fe, fe.metrics()
+
+
+def sequential_stream_reference(cfg, stream, request):
+    """The dedicated-lane oracle for one request: a fresh sequential
+    cascade keyed as RNG stream ``request.rid`` (core/rng.py), serving
+    just that request's items.  In the frozen regime (hard_budget=0 —
+    no jumps, expert calls or updates) a dynamically-admitted stream
+    must reproduce this trajectory bitwise, whatever lane, global tick
+    or co-occupants served it (tests/test_admission.py)."""
+    casc = sequential_engine(cfg, stream)
+    casc.stream_id = request.rid
+    preds, levels = [], []
+    for gi in request.items:
+        out = casc.process(gi, stream.docs[gi])
+        preds.append(int(out["prediction"]))
+        levels.append(int(out["level"]))
+    return preds, levels

@@ -1,0 +1,408 @@
+"""Stream-lifecycle suite for the continuous-batching front-end.
+
+Three layers, mirroring the module's contract (core/admission.py):
+
+* **lifecycle conservation** — property-based (hypothesis, with
+  concrete smoke twins per tests/_hypothesis_stubs.py) over a fake
+  engine that records exactly what the front-end submits: every
+  admitted stream retires exactly once, no lane serves two streams in
+  one tick, occupancy never exceeds the lane budget, admission is FCFS
+  and deterministic in the schedule alone;
+* **parity pins** — the all-at-t=0 lockstep schedule through the
+  front-end is bitwise the classic fixed-S run (predictions, levels,
+  expert calls, costs, params/opt state) including under D>0 and P>0;
+  a staggered-arrival run in the frozen regime (hard_budget=0)
+  reproduces each stream's dedicated-lane sequential reference
+  trajectory; a staggered LEARNING run is bitwise invariant to the
+  execution axes (pipeline depth, expert workers) and its admission
+  log is invariant even to the semantic delay axis;
+* **recycled-lane hygiene** — reset()-then-rerun is bitwise, and a
+  recycled engine serving schedule B equals a fresh engine serving
+  schedule B (no stale ring/cache/commit-log leakage from retired
+  streams).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_stubs import given, settings, st
+
+from dataclasses import replace
+
+from harness import (assert_run_parity, assert_state_equal,
+                     batched_engine, frontend_engine, run_frontend,
+                     run_frontend_pair, sequential_stream_reference,
+                     state_leaves)
+from repro.core import (CascadeConfig, CascadeFrontEnd, LevelSpec,
+                        serve_requests)
+from repro.data import (Request, burst_requests, lockstep_requests,
+                        make_stream, poisson_requests)
+from repro.models.students import MLPSpec
+
+N, S = 96, 8
+_CACHE = {}
+
+
+def _stream_cfg():
+    """The matrix suite's cheap two-level cascade (LR + small MLP)."""
+    if "setup" not in _CACHE:
+        stream = make_stream("hatespeech", seed=0, n_samples=N)
+        levels = (
+            LevelSpec(kind="lr", cost=1.0, cache_size=8, batch_size=8,
+                      student_lr=0.5, beta_decay=0.9,
+                      calibration_factor=0.4),
+            LevelSpec(kind="mlp", cost=50.0, cache_size=16, batch_size=8,
+                      student_lr=1e-3, beta_decay=0.9,
+                      calibration_factor=0.3),
+        )
+        cfg = CascadeConfig(
+            levels=levels, n_classes=stream.spec.n_classes,
+            expert_cost=1.0e6, mu=3e-6, n_features=512,
+            mlp_spec=MLPSpec(n_features=512, hidden=64, n_layers=2),
+            seed=0)
+        _CACHE["setup"] = (stream, cfg)
+    return _CACHE["setup"]
+
+
+def _staggered():
+    """The shared staggered schedule (seeded, ~20 requests over N)."""
+    return poisson_requests(N, rate=0.7, mean_len=5, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle conservation properties (fake engine: pure admission logic)
+# ---------------------------------------------------------------------------
+class _FakeStream:
+    def __init__(self, n):
+        self.docs = list(range(n))
+
+    def __len__(self):
+        return len(self.docs)
+
+
+class _FakeEngine:
+    """Records exactly the tick surface the front-end drives (the
+    documented engine contract: n_streams, t, pipeline_depth,
+    process_tick(indices, docs, lanes=, stream_ids=, stream_ticks=),
+    commit_log, drain, flush)."""
+
+    def __init__(self, n_streams):
+        self.n_streams = n_streams
+        self.pipeline_depth = 0
+        self.t = 0
+        self.commit_log = None
+        self.ticks = []           # (t, lanes, stream_ids, stream_ticks)
+
+    def process_tick(self, indices, docs, *, lanes=None, stream_ids=None,
+                     stream_ticks=None):
+        self.t += 1
+        k = len(indices)
+        self.ticks.append((self.t, list(lanes), list(stream_ids),
+                           list(stream_ticks)))
+        return {"tick": self.t,
+                "indices": np.asarray(indices, np.int64),
+                "lanes": np.asarray(lanes, np.int64),
+                "predictions": np.zeros(k, np.int64),
+                "levels": np.zeros(k, np.int64),
+                "expert_called": np.zeros(k, bool),
+                "cost_units": np.zeros(k),
+                "expert_labels": np.full(k, -1, np.int32)}
+
+    def drain(self):
+        return []
+
+    def flush(self):
+        return 0
+
+
+def _schedule_requests(schedule):
+    """[(arrival_gap, length)] -> contiguous-partition Requests."""
+    reqs, start, arrival = [], 0, 0
+    for rid, (gap, length) in enumerate(schedule):
+        arrival += gap
+        reqs.append(Request(rid=rid, arrival=arrival,
+                            items=tuple(range(start, start + length))))
+        start += length
+    return reqs
+
+
+def _check_lifecycle(schedule, budget, policy, queue_limit):
+    """The conservation properties, on one (schedule, policy) instance."""
+    reqs = _schedule_requests(schedule)
+    total = sum(len(r.items) for r in reqs)
+    eng = _FakeEngine(budget)
+    fe = CascadeFrontEnd(eng, _FakeStream(total), admission=policy,
+                         queue_limit=queue_limit)
+    fe.serve(reqs)
+
+    # -- per-tick invariants, straight from what the engine was handed
+    seen_ticks = {}
+    for t, lanes, sids, sticks in eng.ticks:
+        assert len(lanes) <= budget, "occupancy exceeded the lane budget"
+        assert lanes == sorted(set(lanes)), \
+            "a lane served two streams in one tick (or order broke)"
+        assert len(set(sids)) == len(sids)
+        for sid, tick in zip(sids, sticks):
+            seen_ticks.setdefault(sid, []).append(tick)
+    for rid, ticks in seen_ticks.items():
+        assert ticks == list(range(1, len(ticks) + 1)), \
+            "a stream's local ticks must be 1..n in order"
+
+    # -- conservation: every admitted stream retires exactly once
+    shed = {r.rid for r in reqs if fe.records[r.rid].shed}
+    assert not shed or policy == "shed", "queue policy must never shed"
+    admitted_rids = [rid for rid, _, _ in fe.admission_log]
+    assert sorted(admitted_rids) == sorted(
+        r.rid for r in reqs if r.rid not in shed)
+    assert len(set(admitted_rids)) == len(admitted_rids)
+    for r in reqs:
+        rec = fe.records[r.rid]
+        if rec.shed:
+            assert rec.admit == -1 and rec.items_done == 0
+            continue
+        assert rec.items_done == rec.n_items == len(
+            seen_ticks.get(r.rid, []))
+        assert 0 < max(r.arrival, 1) <= rec.admit <= rec.done < rec.retired
+    assert sum(fe.records[r.rid].items_done for r in reqs) == \
+        total - sum(len(r.items) for r in reqs if r.rid in shed)
+
+    # -- FCFS: lanes are granted in offer order (arrival, then rid)
+    offer_order = [r.rid for r in
+                   sorted(reqs, key=lambda r: (max(r.arrival, 1), r.rid))
+                   if r.rid not in shed]
+    assert admitted_rids == offer_order
+
+    # -- determinism: the same schedule replays to the same log
+    eng2 = _FakeEngine(budget)
+    fe2 = CascadeFrontEnd(eng2, _FakeStream(total), admission=policy,
+                          queue_limit=queue_limit)
+    fe2.serve(reqs)
+    assert fe2.admission_log == fe.admission_log
+    assert eng2.ticks == eng.ticks
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 5)),
+                min_size=1, max_size=12),
+       st.integers(1, 4), st.sampled_from(["queue", "shed"]),
+       st.integers(0, 2))
+@settings(max_examples=40, deadline=None)
+def test_lifecycle_properties(schedule, budget, policy, queue_limit):
+    """Conservation/occupancy/FCFS/determinism over random schedules."""
+    _check_lifecycle(schedule, budget, policy, queue_limit)
+
+
+def test_lifecycle_smoke_underload():
+    """Concrete twin: staggered arrivals under capacity, queue policy."""
+    _check_lifecycle([(0, 3), (1, 2), (2, 4), (0, 1)], 2, "queue", 0)
+
+
+def test_lifecycle_smoke_overload_shed():
+    """Concrete twin: a burst beyond lanes+queue must shed the rest."""
+    _check_lifecycle([(0, 4)] * 6, 2, "shed", 1)
+    reqs = _schedule_requests([(0, 4)] * 6)
+    eng = _FakeEngine(2)
+    fe = CascadeFrontEnd(eng, _FakeStream(24), admission="shed",
+                         queue_limit=1)
+    fe.serve(reqs)
+    # 2 lanes + 1 queue slot: exactly 3 of the 6 simultaneous arrivals
+    # survive the first wave, and each later retirement frees no slot
+    # for requests already dropped (shed is final)
+    assert fe.stats["shed"] == 3 and fe.stats["admitted"] == 3
+
+
+# ---------------------------------------------------------------------------
+# parity pin 1: all-at-t=0 through the front-end == the lockstep run
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("max_delay,depth",
+                         [(0, 0), (2, 0), (0, 2), (2, 2)],
+                         ids=["D0-P0", "D2-P0", "D0-P2", "D2-P2"])
+def test_lockstep_schedule_bitwise(max_delay, depth):
+    """The stride-S all-at-t=0 schedule is bitwise the classic run —
+    predictions, levels, expert calls, per-item costs, params and
+    optimizer state — composed with the async queue and the route
+    pipeline."""
+    stream, cfg = _stream_cfg()
+    ref = batched_engine(cfg, stream, n_streams=S, max_delay=max_delay,
+                         pipeline_depth=depth)
+    eng = frontend_engine(cfg, stream, S, max_delay=max_delay,
+                          pipeline_depth=depth)
+    m_ref, fe, m_fe = run_frontend_pair(
+        ref, eng, stream, lockstep_requests(len(stream), S))
+    assert m_fe["answered"] == m_fe["requests"] == S
+    assert_run_parity(ref, m_ref, eng, m_fe,
+                      history_keys=("level", "expert_called"),
+                      costs=True)
+    # lane recycling left nothing in flight
+    assert not eng._pending and not eng._ring
+
+
+# ---------------------------------------------------------------------------
+# parity pin 2: staggered arrivals reproduce each stream's dedicated-
+# lane sequential reference (frozen regime: the trajectories decouple)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("max_delay,depth,per_lane",
+                         [(0, 0, False), (2, 2, False), (2, 0, True)],
+                         ids=["D0-P0", "D2-P2", "D2-lane"])
+def test_staggered_matches_sequential_reference(max_delay, depth,
+                                                per_lane):
+    """With hard_budget=0 (no jumps, expert calls or updates) every
+    dynamically-admitted stream must produce, item for item, the
+    predictions and levels of a fresh sequential cascade keyed as that
+    stream — whatever lane, global tick, co-occupants, delay or
+    pipeline depth served it."""
+    stream, cfg = _stream_cfg()
+    cfg0 = replace(cfg, hard_budget=0)
+    reqs = _staggered()
+    eng = frontend_engine(cfg0, stream, 4, max_delay=max_delay,
+                          pipeline_depth=depth, per_lane=per_lane)
+    fe, m = run_frontend(eng, stream, reqs)
+    assert m["answered"] == len(reqs)
+    for r in reqs:
+        preds, levels = sequential_stream_reference(cfg0, stream, r)
+        rec = fe.records[r.rid]
+        assert rec.predictions == preds, f"stream {r.rid} preds diverge"
+        assert rec.levels == levels, f"stream {r.rid} levels diverge"
+
+
+def test_staggered_invariant_to_execution_knobs():
+    """Learning regime: a staggered run is bitwise invariant to the
+    pure execution axes — pipeline depth and expert workers — and the
+    admission log is invariant even across the (semantic) delay axis."""
+    stream, cfg = _stream_cfg()
+    reqs = _staggered()
+    base = frontend_engine(cfg, stream, 4)
+    fe0, m0 = run_frontend(base, stream, reqs)
+    for kw in ({"pipeline_depth": 2}, {"expert_kw": {"workers": 2}}):
+        eng = frontend_engine(cfg, stream, 4, **kw)
+        fe, m = run_frontend(eng, stream, reqs)
+        np.testing.assert_array_equal(m0["predictions"],
+                                      m["predictions"])
+        assert fe.admission_log == fe0.admission_log
+        assert_state_equal(base.levels, eng.levels)
+        for rid, rec in fe0.records.items():
+            other = fe.records[rid]
+            assert (rec.admit, rec.done, rec.retired, rec.lane) == \
+                (other.admit, other.done, other.retired, other.lane)
+            assert rec.predictions == other.predictions
+    # the delay axis changes update timing (a documented semantic axis)
+    # but admission/retirement timing is schedule-driven and identical
+    eng_d = frontend_engine(cfg, stream, 4, max_delay=2)
+    fe_d, _ = run_frontend(eng_d, stream, reqs)
+    assert fe_d.admission_log == fe0.admission_log
+
+
+# ---------------------------------------------------------------------------
+# recycled-lane hygiene: reset() and commit-log attribution
+# ---------------------------------------------------------------------------
+def test_recycle_then_rerun_bitwise():
+    """A front-end run that recycled lanes many times, reset, and rerun
+    must be bitwise the first run — stale ring/cache/commit-log state
+    from retired streams must not leak into the next occupancy."""
+    stream, cfg = _stream_cfg()
+    reqs = _staggered()
+    eng = frontend_engine(cfg, stream, 4, max_delay=2, pipeline_depth=2)
+    fe_a, m_a = run_frontend(eng, stream, reqs)
+    leaves_a = [leaf.copy() for leaf in state_leaves(eng.levels)]
+    commits_a = {rid: list(r.commit_ticks)
+                 for rid, r in fe_a.records.items()}
+    eng.reset()
+    assert eng.commit_log == [] and not eng._pending and not eng._ring
+    fe_b, m_b = run_frontend(eng, stream, reqs)
+    np.testing.assert_array_equal(m_a["predictions"], m_b["predictions"])
+    assert fe_b.admission_log == fe_a.admission_log
+    for a, b in zip(leaves_a, state_leaves(eng.levels)):
+        np.testing.assert_array_equal(a, b)
+    assert commits_a == {rid: list(r.commit_ticks)
+                         for rid, r in fe_b.records.items()}
+
+
+def test_recycled_engine_equals_fresh_engine():
+    """Serving schedule A, resetting, then serving schedule B equals a
+    fresh engine serving schedule B (the recycled-lane reset audit)."""
+    stream, cfg = _stream_cfg()
+    reqs_a = burst_requests(N, burst=5, every=3, mean_len=4, seed=7)
+    reqs_b = _staggered()
+    eng = frontend_engine(cfg, stream, 4, max_delay=2)
+    run_frontend(eng, stream, reqs_a)
+    eng.reset()
+    fe1, m1 = run_frontend(eng, stream, reqs_b)
+    fresh = frontend_engine(cfg, stream, 4, max_delay=2)
+    fe2, m2 = run_frontend(fresh, stream, reqs_b)
+    np.testing.assert_array_equal(m1["predictions"], m2["predictions"])
+    assert_state_equal(eng.levels, fresh.levels)
+    assert eng.commit_log == fresh.commit_log
+    assert {r: rec.commit_ticks for r, rec in fe1.records.items()} == \
+        {r: rec.commit_ticks for r, rec in fe2.records.items()}
+
+
+# ---------------------------------------------------------------------------
+# engine-surface contracts the front-end rests on
+# ---------------------------------------------------------------------------
+def test_commit_log_decoupled_from_history_limit():
+    """commit_log=True/False overrides the legacy history coupling (the
+    front-end needs the log while serving with history_limit=0)."""
+    stream, cfg = _stream_cfg()
+    legacy_on = batched_engine(cfg, stream, n_streams=2)
+    legacy_off = batched_engine(cfg, stream, n_streams=2,
+                                history_limit=0)
+    forced_on = batched_engine(cfg, stream, n_streams=2, history_limit=0,
+                               commit_log=True)
+    forced_off = batched_engine(cfg, stream, n_streams=2,
+                                commit_log=False)
+    assert legacy_on.commit_log == [] and forced_on.commit_log == []
+    assert legacy_off.commit_log is None
+    assert forced_off.commit_log is None and forced_off.history is not None
+
+
+def test_commit_attribution_and_delay_bound():
+    """Every expert call of every stream gets exactly one commit tick in
+    its record, and every commit lands within the D-tick bound of its
+    submit tick — through admit/serve/retire/recycle."""
+    stream, cfg = _stream_cfg()
+    eng = frontend_engine(cfg, stream, 4, max_delay=2)
+    fe = serve_requests(eng, stream, _staggered())
+    assert not eng._pending and not eng._ring
+    for sub_t, lane, commit_t in eng.commit_log:
+        assert 0 <= commit_t - sub_t <= 2
+        assert 0 <= lane < 4
+    for rec in fe.records.values():
+        assert len(rec.commit_ticks) == rec.expert_calls
+
+
+def test_empty_tick_advances_commit_deadlines():
+    """An idle (empty) tick still moves the clock: a pending annotation
+    routed before an idle gap commits on schedule during the gap."""
+    stream, cfg = _stream_cfg()
+    eng = batched_engine(cfg, stream, n_streams=2, max_delay=2)
+    # tick 1: both lanes defer (beta0=1 jumps everything on tick 1)
+    eng.process_tick([0, 1], [stream.docs[0], stream.docs[1]])
+    assert len(eng._pending) == 1
+    before = [leaf.copy() for leaf in state_leaves(eng.levels)]
+    eng.process_tick([], [])          # idle tick, age 1: not yet due
+    assert len(eng._pending) == 1
+    eng.process_tick([], [])          # idle tick, age 2 == D: commits
+    assert len(eng._pending) == 0
+    after = state_leaves(eng.levels)
+    assert any(not np.array_equal(a, b) for a, b in zip(before, after))
+    assert eng.commit_log == [(1, 0, 3), (1, 1, 3)]
+
+
+def test_occupancy_kwargs_validation():
+    """Malformed occupancy arguments fail loudly at dispatch."""
+    stream, cfg = _stream_cfg()
+    eng = batched_engine(cfg, stream, n_streams=4)
+    docs = [stream.docs[0], stream.docs[1]]
+    with pytest.raises(ValueError, match="strictly increasing"):
+        eng.process_tick([0, 1], docs, lanes=[1, 0])
+    with pytest.raises(ValueError, match="strictly increasing"):
+        eng.process_tick([0, 1], docs, lanes=[2, 9])
+    with pytest.raises(ValueError, match="one entry per tick position"):
+        eng.process_tick([0, 1], docs, lanes=[0])
+    with pytest.raises(ValueError, match="stream_ids"):
+        eng.process_tick([0, 1], docs, stream_ids=[5])
+    with pytest.raises(ValueError, match="stream_ticks"):
+        eng.process_tick([0, 1], docs, stream_ticks=[1])
+    with pytest.raises(ValueError, match="admission"):
+        CascadeFrontEnd(eng, stream, admission="drop-all")

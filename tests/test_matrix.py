@@ -13,12 +13,14 @@ at the documented SPMD float tolerance and are marked ``multidevice``
 (they run under the 8-virtual-device CI job and skip elsewhere).
 """
 import jax
+import numpy as np
 import pytest
 
 from harness import (MESH_ATOL, MESH_RTOL, assert_run_parity,
-                     batched_engine)
+                     assert_state_equal, batched_engine, frontend_engine,
+                     run_frontend)
 from repro.core import CascadeConfig, LevelSpec
-from repro.data import make_stream
+from repro.data import make_stream, poisson_requests
 from repro.models.students import MLPSpec
 
 N, S = 96, 8
@@ -110,4 +112,78 @@ def test_composition_cell(mesh_kind, max_delay, depth, updates, workers):
                           attrs=("params", "dparams"),
                           history_keys=("level", "expert_called"),
                           rtol=MESH_RTOL, atol=MESH_ATOL)
+    assert len(eng._pending) == 0 and len(eng._ring) == 0
+
+
+# ---------------------------------------------------------------------------
+# admission-on cells: the continuous-batching front-end across the
+# same execution/semantic axes (the admission-OFF grid is the matrix
+# above; tests/test_admission.py holds the lockstep/sequential pins)
+# ---------------------------------------------------------------------------
+def _requests():
+    """The shared staggered arrival schedule (seeded Poisson)."""
+    if "reqs" not in _CACHE:
+        _CACHE["reqs"] = poisson_requests(N, rate=0.7, mean_len=5, seed=3)
+    return _CACHE["reqs"]
+
+
+def _frontend_reference(max_delay, per_lane):
+    """The plain-engine front-end run sharing the cell's semantic axes
+    (no mesh, no pipeline, one worker)."""
+    key = ("fe-ref", max_delay, per_lane)
+    if key not in _CACHE:
+        stream, cfg = _stream_cfg()
+        eng = frontend_engine(cfg, stream, S, max_delay=max_delay,
+                              per_lane=per_lane)
+        fe, m = run_frontend(eng, stream, _requests())
+        _CACHE[key] = (eng, fe, m)
+    return _CACHE[key]
+
+
+def _admission_cells():
+    cells = []
+    for mesh, d, p, w in (("none", 0, 2, 1), ("none", 2, 0, 1),
+                          ("none", 2, 2, 2), ("data8", 0, 0, 1),
+                          ("data8", 2, 2, 1)):
+        marks = [pytest.mark.multidevice] if mesh == "data8" else []
+        cells.append(pytest.param(mesh, d, p, w, marks=marks,
+                                  id=f"adm-{mesh}-D{d}-P{p}-W{w}"))
+    return cells
+
+
+@pytest.mark.parametrize("mesh_kind,max_delay,depth,workers",
+                         _admission_cells())
+def test_admission_cell(mesh_kind, max_delay, depth, workers):
+    """A staggered-arrival front-end run is invariant to the pure
+    execution axes: same admission log, same per-stream trajectories,
+    same final state (bitwise off-mesh, SPMD tolerance on-mesh)."""
+    if mesh_kind == "data8" and len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI job: "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    per_lane = workers > 1
+    ref_eng, ref_fe, ref_m = _frontend_reference(max_delay, per_lane)
+    stream, cfg = _stream_cfg()
+    mesh = None
+    if mesh_kind == "data8":
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8, 1), ("data", "model"))
+    eng = frontend_engine(
+        cfg, stream, S, mesh=mesh, max_delay=max_delay,
+        pipeline_depth=depth, per_lane=per_lane,
+        expert_kw={"workers": workers})
+    fe, m = run_frontend(eng, stream, _requests())
+    assert fe.admission_log == ref_fe.admission_log
+    np.testing.assert_array_equal(m["predictions"], ref_m["predictions"])
+    for rid, rec in ref_fe.records.items():
+        other = fe.records[rid]
+        assert (rec.admit, rec.done, rec.retired, rec.lane) == \
+            (other.admit, other.done, other.retired, other.lane)
+        assert rec.predictions == other.predictions
+        assert rec.levels == other.levels
+    if mesh is None:
+        assert_state_equal(ref_eng.levels, eng.levels)
+    else:
+        assert_state_equal(ref_eng.levels, eng.levels,
+                           attrs=("params", "dparams"),
+                           rtol=MESH_RTOL, atol=MESH_ATOL)
     assert len(eng._pending) == 0 and len(eng._ring) == 0
