@@ -1,0 +1,154 @@
+"""Goodput + commit-age under injected expert-fleet failures.
+
+The elastic fleet's contract (core/experts.py, core/batched.py): under
+worker deaths and shard timeouts every deferred item still commits
+exactly once — requeued within its D-tick deadline when a retry lands,
+or degraded to the provisional student answer (counted in
+``dropped_annotations``) after ``max_requeues``.  This harness measures
+what that costs: for a sweep of injected fault rates it reports
+
+* **goodput** — items served per second (the requeue path's wall-clock
+  overhead: re-submitted shards, timeout waits);
+* **mean/max commit age** — how close annotation commits run to the
+  D-tick deadline as faults push retries later;
+* **drop fraction** — annotations degraded per deferred item (the
+  accuracy-relevant loss: each drop is one missed online update);
+* the full ``fault_stats`` accounting (timeouts, deaths, requeues).
+
+The deterministic default schedule keeps routing/commit decisions
+bitwise invariant to fault timing, so rate sweeps are comparable
+run-to-run: only wall clock and the drop set move.
+
+Usage:
+  PYTHONPATH=src python benchmarks/fault_tolerance.py [--quick | --smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (BatchedCascadeEngine, FlakyExpert, SimulatedExpert,
+                        default_cascade_config)
+from repro.data import make_stream
+
+
+def _engine(stream, cfg, lanes: int, rates: dict, seed: int,
+            workers: int = 2, autoscale=None) -> BatchedCascadeEngine:
+    inner = SimulatedExpert(stream,
+                            workers="auto" if autoscale else workers)
+    expert = FlakyExpert(inner, seed=seed, **rates) if rates else inner
+    return BatchedCascadeEngine(cfg, expert, n_streams=lanes,
+                                max_delay=2, per_lane=True,
+                                history_limit=0,
+                                expert_timeout=0.05, max_requeues=2,
+                                autoscale=autoscale)
+
+
+def _point(stream, cfg, lanes: int, *, rate: float, seed: int,
+           autoscale=None) -> dict:
+    """One injected-fault-rate point (rate split across timeout/death)."""
+    rates = ({"timeout_rate": rate / 2, "death_rate": rate / 2}
+             if rate else {})
+    eng = _engine(stream, cfg, lanes, rates, seed, autoscale=autoscale)
+    t0 = time.time()
+    m = eng.run(stream)
+    dt = time.time() - t0
+    cs, fs = eng.commit_stats, eng.fault_stats
+    deferred = max(int(np.sum(np.asarray(eng.expert_calls))), 1)
+    out = {
+        "rate": rate,
+        "goodput_items_per_sec": len(stream) / max(dt, 1e-9),
+        "accuracy": m["accuracy"],
+        "commit_age_mean": (cs["age_sum"] / cs["lanes"]
+                            if cs["lanes"] else 0.0),
+        "commit_age_max": cs["age_max"],
+        "drop_frac": fs["dropped_annotations"] / deferred,
+        "timeouts": fs["timeouts"],
+        "worker_deaths": fs["worker_deaths"],
+        "requeues": fs["requeues"],
+        "dropped_annotations": fs["dropped_annotations"],
+        "fleet_resizes": len(eng.fleet_log),
+        "seconds": dt,
+    }
+    eng.close()
+    return out
+
+
+def run(samples: int = 1536, seed: int = 0, lanes: int = 8,
+        rates=(0.0, 0.05, 0.2), autoscale=None, quick: bool = False,
+        smoke: bool = False) -> dict:
+    """Sweep injected fault rates; report goodput, commit age, drops.
+
+    The ``rate=0`` point is the fault-free baseline every other point
+    is normalized against."""
+    if quick:
+        samples = min(samples, 768)
+    if smoke:
+        samples, lanes, rates = 192, 4, (0.0, 0.25)
+    stream = make_stream("hatespeech", seed=seed, n_samples=samples)
+    cfg = default_cascade_config(n_classes=stream.spec.n_classes,
+                                 mu=3e-7, seed=seed)
+    points = []
+    for rate in rates:
+        p = _point(stream, cfg, lanes, rate=rate, seed=seed,
+                   autoscale=autoscale)
+        points.append(p)
+        print(f"rate={rate:.2f}  "
+              f"goodput={p['goodput_items_per_sec']:.1f}/s  "
+              f"acc={p['accuracy']:.4f}  "
+              f"commit age mean={p['commit_age_mean']:.2f} "
+              f"max={p['commit_age_max']}  "
+              f"requeues={p['requeues']} "
+              f"drops={p['dropped_annotations']} "
+              f"({p['drop_frac']:.1%} of deferred)"
+              + (f"  resizes={p['fleet_resizes']}"
+                 if autoscale else ""))
+    base = points[0]
+    worst = points[-1]
+    out = {"points": points,
+           "headline_goodput_ratio":
+               worst["goodput_items_per_sec"]
+               / max(base["goodput_items_per_sec"], 1e-9),
+           "headline_drop_frac": worst["drop_frac"],
+           "headline_age_mean": worst["commit_age_mean"]}
+    if base is not worst:
+        print(f"at rate={worst['rate']:.2f}: goodput held at "
+              f"{out['headline_goodput_ratio']:.2f}x fault-free, "
+              f"drops={worst['drop_frac']:.1%}, commit age "
+              f"{base['commit_age_mean']:.2f} -> "
+              f"{worst['commit_age_mean']:.2f} ticks "
+              f"(deadline bound {worst['commit_age_max']} <= D)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--samples", type=int, default=1536)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--rates", type=float, nargs="*",
+                    default=[0.0, 0.05, 0.2],
+                    help="injected per-(submit, shard) fault rates "
+                         "(split evenly between timeouts and deaths); "
+                         "0.0 is the baseline point")
+    ap.add_argument("--autoscale", default="",
+                    help="elastic fleet bounds 'LO:HI' (empty = fixed "
+                         "2-worker pool)")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (benchmarks/run.py --quick)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, bounded runtime")
+    args = ap.parse_args()
+    autoscale = None
+    if args.autoscale:
+        lo, _, hi = args.autoscale.partition(":")
+        autoscale = (int(lo), int(hi))
+    run(samples=args.samples, seed=args.seed, lanes=args.lanes,
+        rates=tuple(args.rates), autoscale=autoscale,
+        quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,10 +29,11 @@ def main() -> None:
 
     from benchmarks import (async_throughput, batched_throughput,
                             case_analysis, cost_equilibrium,
-                            distribution_shift, kernel_levels,
-                            load_harness, pipelined_throughput,
-                            pool_throughput, prefill_cost, regret,
-                            roofline_report, sharded_throughput, table1,
+                            distribution_shift, fault_tolerance,
+                            kernel_levels, load_harness,
+                            pipelined_throughput, pool_throughput,
+                            prefill_cost, regret, roofline_report,
+                            sharded_throughput, table1,
                             tradeoff_curves)
 
     quick = args.quick
@@ -131,6 +132,15 @@ def main() -> None:
                f"goodput_over={lh['headline_goodput_over']:.0f}/s_"
                f"p99_under={lh['headline_p99_under_s'] * 1e3:.0f}ms_"
                f"p99_over={lh['headline_p99_over_s'] * 1e3:.0f}ms")
+
+    if "faults" not in args.skip:
+        t0 = time.time()
+        ft = fault_tolerance.run(samples=min(n, 768), seed=args.seed,
+                                 quick=quick)
+        record("fault_tolerance", t0,
+               f"goodput_ratio={ft['headline_goodput_ratio']:.2f}x_"
+               f"drops={ft['headline_drop_frac']:.1%}_"
+               f"age={ft['headline_age_mean']:.2f}")
 
     if "prefill" not in args.skip:
         t0 = time.time()

@@ -188,6 +188,30 @@ def trace_of(engine) -> Optional[Trace]:
     return getattr(engine, "_san_trace", None)
 
 
+def concat_traces(a: Optional[Trace], b: Optional[Trace]
+                  ) -> Optional[Trace]:
+    """Join two trace segments end-to-end (checkpoint/restore runs).
+
+    A run interrupted by ``save_state``/``restore_state`` records its
+    trace in two pieces — the pre-checkpoint engine's and the resumed
+    engine's.  Concatenating them yields a trace comparable tick-by-tick
+    (via :func:`diff_traces`) with an uninterrupted run's, which is how
+    tests/test_faults.py pins resume parity at trace granularity.  The
+    segments must abut: ``b``'s first tick must follow ``a``'s last
+    (docs/ANALYSIS.md "Tracing across restore")."""
+    if a is None or b is None:
+        return b if a is None else a
+    if a.ticks and b.ticks:
+        last, first = a.ticks[-1].get("t"), b.ticks[0].get("t")
+        if last is not None and first is not None and first != last + 1:
+            raise ValueError(
+                f"trace segments do not abut: first ends at tick {last}, "
+                f"second starts at tick {first}")
+    out = Trace()
+    out.ticks = list(a.ticks) + list(b.ticks)
+    return out
+
+
 def drop_trace(engine) -> None:
     """Discard ``engine``'s recorded trace (engines call this from
     ``reset()`` so a reused engine starts a fresh, comparable trace)."""

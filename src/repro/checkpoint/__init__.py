@@ -1,4 +1,5 @@
-"""Checkpoint save/restore for zoo model params and train state."""
-from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+"""Checkpoint save/restore for zoo model params and live engine state."""
+from repro.checkpoint.ckpt import (CheckpointError, restore_checkpoint,
+                                   save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointError"]

@@ -3,18 +3,28 @@
 Arrays are gathered to host (sharded arrays are fully addressable on the
 single-process dry-run meshes) and stored flat; the manifest preserves tree
 structure, dtypes, and user metadata (step counters, config name, ...).
+
+The engines build on this for live-state checkpointing (ARCHITECTURE.md
+§10): ``BatchedCascadeEngine.save_state`` / ``restore_state`` serialize
+their full pytree of learned + queue state here and keep the non-array
+live state (RNG generator states, commit cursors, stats) in ``metadata``.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 _SEP = "::"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, corrupted, or written for another config."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -30,6 +40,14 @@ def _flatten(tree) -> Dict[str, Any]:
                 parts.append(str(p))
         flat[_SEP.join(parts)] = leaf
     return flat
+
+
+def _part_order(part: str):
+    # list indices must sort numerically: "#10" comes after "#9", not
+    # between "#1" and "#2" as a lexicographic sort would place it
+    if part.startswith("#"):
+        return (1, int(part[1:]), "")
+    return (0, 0, part)
 
 
 def _unflatten(flat: Dict[str, np.ndarray]):
@@ -60,12 +78,23 @@ def _unflatten(flat: Dict[str, np.ndarray]):
             insert(node[key], parts[1:], value)
         return node
 
-    for k in sorted(flat.keys()):
+    for k in sorted(flat.keys(),
+                    key=lambda s: tuple(_part_order(p) for p in s.split(_SEP))):
         parts = k.split(_SEP)
         if root is None:
             root = [] if parts[0].startswith("#") else {}
         insert(root, parts, flat[k])
     return root
+
+
+def _root_kind(tree) -> str:
+    if tree is None:
+        return "none"
+    if isinstance(tree, (list, tuple)):
+        return "list"
+    if isinstance(tree, dict):
+        return "dict"
+    return "leaf"
 
 
 def save_checkpoint(path: str, tree, metadata: Optional[dict] = None) -> str:
@@ -76,6 +105,9 @@ def save_checkpoint(path: str, tree, metadata: Optional[dict] = None) -> str:
         "keys": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
                  for k, v in flat.items()},
         "metadata": metadata or {},
+        # empty trees flatten to nothing; record the container kind so an
+        # empty dict restores as {} rather than None
+        "root_kind": _root_kind(tree),
     }
     # NOTE: np.savez appends '.npz' unless the name already ends with it.
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
@@ -96,14 +128,40 @@ def save_checkpoint(path: str, tree, metadata: Optional[dict] = None) -> str:
 
 
 def restore_checkpoint(path: str) -> Tuple[Any, dict]:
-    """Returns (tree, metadata)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    """Returns (tree, metadata); raises CheckpointError on damage."""
+    manifest_path = os.path.join(path, "manifest.json")
+    arrays_path = os.path.join(path, "arrays.npz")
+    if not os.path.isfile(manifest_path):
+        raise CheckpointError(f"no checkpoint manifest at {manifest_path}")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(f"corrupted manifest {manifest_path}: {e}") from e
+    keys = manifest.get("keys")
+    if keys:
+        if not os.path.isfile(arrays_path):
+            raise CheckpointError(f"manifest names arrays but {arrays_path} "
+                                  "is missing (partial write?)")
+        try:
+            data = np.load(arrays_path)
+        except (zipfile.BadZipFile, OSError, ValueError) as e:
+            raise CheckpointError(
+                f"corrupted array store {arrays_path}: {e}") from e
+    else:
+        data, keys = {}, {}
     flat = {}
-    for k, info in manifest["keys"].items():
-        arr = data[k]
+    for k, info in keys.items():
+        try:
+            arr = data[k]
+        except KeyError as e:
+            raise CheckpointError(f"array {k!r} named in manifest is missing "
+                                  f"from {arrays_path} (truncated?)") from e
         if info["dtype"] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16)
         flat[k] = arr
-    return _unflatten(flat), manifest["metadata"]
+    tree = _unflatten(flat)
+    if tree is None:
+        kind = manifest.get("root_kind", "none")
+        tree = {"dict": {}, "list": [], "none": None, "leaf": None}[kind]
+    return tree, manifest["metadata"]

@@ -14,7 +14,9 @@ from repro.core.deferral import (
     DeferralSpec, deferral_init, deferral_prob, reexploration_floor)
 from repro.core.distill import distill_students
 from repro.core.ensemble import OnlineEnsemble
-from repro.core.experts import ModelExpert, SimulatedExpert
+from repro.core.experts import (
+    ExpertShardError, ExpertShardTimeout, ExpertWorkerDied, FlakyExpert,
+    ModelExpert, SimulatedExpert)
 from repro.core.mdp import episode_cost, policy_value
 
 __all__ = [
@@ -24,5 +26,7 @@ __all__ = [
     "LevelSpec", "CascadeConfig", "OnlineCascade", "default_cascade_config",
     "kernel_cascade_config", "BatchedCascadeEngine",
     "CascadeFrontEnd", "StreamRecord", "serve_requests",
-    "SimulatedExpert", "ModelExpert", "OnlineEnsemble", "distill_students",
+    "SimulatedExpert", "ModelExpert", "FlakyExpert",
+    "ExpertShardError", "ExpertShardTimeout", "ExpertWorkerDied",
+    "OnlineEnsemble", "distill_students",
 ]

@@ -50,10 +50,11 @@ learning).
 """
 from __future__ import annotations
 
+import json
 import time
 from bisect import bisect_right
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -271,14 +272,21 @@ class CascadeFrontEnd:
         self._consume_commits()
         self._retire(self.engine.t + 1)
 
-    def serve(self, requests: Sequence, max_ticks: Optional[int] = None
-              ) -> Dict[int, StreamRecord]:
+    def serve(self, requests: Sequence, max_ticks: Optional[int] = None,
+              finalize: bool = True) -> Dict[int, StreamRecord]:
         """Tick-driven serve loop over a full schedule: offer each
         request at its arrival tick, step until everything retired (or
         ``max_ticks``), then ``finish()``.  Deterministic in the
-        schedule — nothing here reads an engine output."""
-        pending = deque(sorted(requests,
-                               key=lambda r: (max(r.arrival, 1), r.rid)))
+        schedule — nothing here reads an engine output.
+
+        ``finalize=False`` skips ``finish()`` on a ``max_ticks`` break,
+        leaving the front-end mid-stream for ``save_state()``; calling
+        ``serve()`` again (same schedule) resumes — requests already
+        offered before the break (present in ``records``) are skipped.
+        """
+        pending = deque(sorted(
+            (r for r in requests if r.rid not in self.records),
+            key=lambda r: (max(r.arrival, 1), r.rid)))
         while pending or self.active():
             if max_ticks is not None and self.engine.t >= max_ticks:
                 break
@@ -291,8 +299,76 @@ class CascadeFrontEnd:
             while pending and max(pending[0].arrival, 1) <= t_next:
                 self.offer(pending.popleft())
             self.step()
-        self.finish()
+        if finalize:
+            self.finish()
         return self.records
+
+    # -- live-state checkpointing ----------------------------------------
+    def save_state(self, path: str) -> None:
+        """Checkpoint the front-end mid-schedule: drain the engine's
+        route ring (consuming the late outputs so ``_tick_layout`` is
+        empty), save the engine's live state under ``path``, and write
+        the admission bookkeeping to ``path + '.frontend.json'``.
+
+        Wall-clock fields (``arrival_wall``/``answer_wall``) survive as
+        recorded values; tick bookkeeping is exact."""
+        for out in self.engine.drain():
+            self._consume(out)
+        self._consume_commits()
+        self.engine.save_state(path)
+        state = {
+            "occupant": [-1 if r is None else int(r)
+                         for r in self._occupant],
+            "free": [int(s) for s in self._free],
+            "queue": [int(r) for r in self._queue],
+            "cursor": {str(k): int(v) for k, v in self._cursor.items()},
+            "records": {str(k): asdict(v)
+                        for k, v in self.records.items()},
+            "lane_history": [[list(sp) for sp in spans]
+                             for spans in self._lane_history],
+            "commit_seen": int(self._commit_seen),
+            "stats": dict(self.stats),
+            "admission_log": [list(e) for e in self.admission_log],
+            "admission": self.admission,
+            "queue_limit": int(self.queue_limit),
+        }
+        with open(path + ".frontend.json", "w") as fh:
+            json.dump(state, fh)
+
+    def restore_state(self, path: str, requests: Sequence) -> None:
+        """Resume a checkpointed front-end: restore the engine's live
+        state, rebuild the admission bookkeeping, and re-bind the
+        ``Request`` objects (matched by rid) for the streams that were
+        queued or mid-flight at save time."""
+        self.engine.restore_state(path)
+        with open(path + ".frontend.json") as fh:
+            state = json.load(fh)
+        if (state["admission"] != self.admission
+                or state["queue_limit"] != self.queue_limit):
+            raise ValueError(
+                "checkpoint admission policy mismatch: saved "
+                f"({state['admission']!r}, {state['queue_limit']}) vs "
+                f"({self.admission!r}, {self.queue_limit})")
+        by_rid = {r.rid: r for r in requests}
+        self._occupant = [None if r < 0 else r for r in state["occupant"]]
+        self._free = list(state["free"])
+        self._queue = deque(state["queue"])
+        self._cursor = {int(k): v for k, v in state["cursor"].items()}
+        self.records = {int(k): StreamRecord(**v)
+                        for k, v in state["records"].items()}
+        self._requests = {rid: by_rid[rid] for rid in self._cursor
+                          if rid in by_rid}
+        missing = set(self._cursor) - set(self._requests)
+        if missing:
+            raise ValueError(
+                f"restore_state: rids {sorted(missing)} in the "
+                "checkpoint are absent from the given schedule")
+        self._tick_layout = {}
+        self._lane_history = [[tuple(sp) for sp in spans]
+                              for spans in state["lane_history"]]
+        self._commit_seen = state["commit_seen"]
+        self.stats = dict(state["stats"])
+        self.admission_log = [tuple(e) for e in state["admission_log"]]
 
     # -- metrics ---------------------------------------------------------
     def metrics(self) -> dict:

@@ -255,8 +255,8 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -265,9 +265,18 @@ import numpy as np
 from repro.analysis import sanitize as _san
 from repro.core.cascade import CascadeConfig, _Level, make_history
 from repro.core.deferral import reexploration_floor
-from repro.core.experts import ExpertTicket
-from repro.core.rng import sample_cache_indices, tick_rngs
+from repro.core.experts import (ExpertShardError, ExpertShardTimeout,
+                                ExpertTicket)
+from repro.core.rng import (generator_from_state, generator_state,
+                            sample_cache_indices, tick_rngs)
 from repro.sharding import host_prefetch, jit_cache_scatter, jit_route_pass
+
+# autoscale unit: target one worker per this many uncommitted deferred
+# items (clipped into the configured [lo, hi] fleet bounds)
+_AUTOSCALE_ITEMS_PER_WORKER = 4
+
+# checkpoint schema version (save_state/restore_state)
+_CKPT_VERSION = 1
 
 
 def lanes_due(k: int, age: int, max_delay: int, per_lane: bool) -> int:
@@ -317,6 +326,12 @@ class _PendingTick:
     feats_dev: Optional[list] = None   # device copies of feats, uploaded
                                        # once and shared by the record's
                                        # per-lane scatters
+    idxs: Optional[list] = None   # stream indices of the called lanes
+                                  # (what a failed shard is requeued as)
+    docs_k: Optional[list] = None  # raw docs of the called lanes (None
+                                   # after restore: ticket already
+                                   # resolved, requeue unreachable)
+    requeues: dict = field(default_factory=dict)  # shard lo -> retries
 
 
 @dataclass
@@ -365,7 +380,11 @@ class BatchedCascadeEngine:
                  max_delay: int = 0, pipeline_depth: int = 0,
                  per_lane: bool = False,
                  history_limit: Optional[int] = None,
-                 commit_log: Optional[bool] = None):
+                 commit_log: Optional[bool] = None,
+                 expert_timeout: Optional[float] = None,
+                 max_requeues: int = 2,
+                 autoscale: Optional[Tuple[int, int]] = None,
+                 readiness_commits: bool = False):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if updates_per_tick not in ("single", "scaled"):
@@ -377,6 +396,28 @@ class BatchedCascadeEngine:
         if pipeline_depth < 0:
             raise ValueError(
                 f"pipeline_depth must be >= 0, got {pipeline_depth}")
+        if expert_timeout is not None and expert_timeout <= 0:
+            raise ValueError(
+                f"expert_timeout must be > 0 (or None), got {expert_timeout}")
+        if max_requeues < 0:
+            raise ValueError(f"max_requeues must be >= 0, got {max_requeues}")
+        # an expert constructed with workers="auto" opts into autoscaling
+        # even when the engine caller didn't pass bounds
+        if autoscale is None and getattr(expert, "auto_workers", False):
+            autoscale = (1, 8)
+        if autoscale is True:
+            autoscale = (1, 8)
+        if autoscale is not None:
+            lo, hi = int(autoscale[0]), int(autoscale[1])
+            if not (1 <= lo <= hi):
+                raise ValueError(
+                    f"autoscale bounds must satisfy 1 <= lo <= hi, "
+                    f"got ({lo}, {hi})")
+            autoscale = (lo, hi)
+            if not hasattr(expert, "workers"):
+                raise ValueError(
+                    "autoscale requires an expert with a mutable "
+                    "`workers` fleet width")
         self.cfg = config
         self.expert = expert
         self.n_streams = n_streams
@@ -384,6 +425,16 @@ class BatchedCascadeEngine:
         self.max_delay = int(max_delay)
         self.pipeline_depth = int(pipeline_depth)
         self.per_lane = bool(per_lane)
+        self.expert_timeout = expert_timeout
+        self.max_requeues = int(max_requeues)
+        self.autoscale = autoscale
+        self.readiness_commits = bool(readiness_commits)
+        if autoscale is not None:
+            expert.workers = autoscale[0]
+            # pools sized once take the upper bound so scaling up never
+            # needs an executor rebuild (ModelExpert._pool_width)
+            if getattr(expert, "max_workers", False) is None:
+                expert.max_workers = autoscale[1]
         self.mesh = mesh
         if mesh is not None:
             from repro.sharding import (lane_count, put_lanes,
@@ -453,7 +504,8 @@ class BatchedCascadeEngine:
         # admission front-end needs per-lane commit ticks for its
         # per-stream records while running with history_limit=0
         # (core/admission.py consumes the log with a cursor).
-        self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
+        self.commit_stats = {"lanes": 0, "age_sum": 0, "age_max": 0,
+                             "wall_sum": 0.0}
         if commit_log is None:
             commit_log = history_limit is None
         self.commit_log: Optional[list] = [] if commit_log else None
@@ -468,6 +520,13 @@ class BatchedCascadeEngine:
         self.pipeline_stats = {"submitted": 0, "resolved": 0,
                                "refetches": 0, "update_fences": 0,
                                "budget_fences": 0}
+        # failure-semantics + fleet accounting (ARCHITECTURE.md §10):
+        # every injected/observed fault is either healed (requeues) or
+        # explicitly surrendered (dropped_annotations) — never silent
+        self.fault_stats = {"timeouts": 0, "worker_deaths": 0,
+                            "requeues": 0, "dropped_annotations": 0,
+                            "scale_ups": 0, "scale_downs": 0}
+        self.fleet_log: List[Tuple[int, int]] = []   # (tick, new width)
         self._build_steps()
 
     def reset(self):
@@ -500,12 +559,35 @@ class BatchedCascadeEngine:
         self._state_version += 1
         for k in self.pipeline_stats:
             self.pipeline_stats[k] = 0
-        self.commit_stats = {"lanes": 0, "age_sum": 0, "wall_sum": 0.0}
+        self.commit_stats = {"lanes": 0, "age_sum": 0, "age_max": 0,
+                             "wall_sum": 0.0}
         if self.commit_log is not None:
             self.commit_log.clear()
+        for k in self.fault_stats:
+            self.fault_stats[k] = 0
+        self.fleet_log.clear()
+        if self.autoscale is not None:
+            self.expert.workers = self.autoscale[0]
+        # reap the expert's worker pool: a reset engine must not leak
+        # the old stream's threads/processes (pools rebuild lazily on
+        # the next submit, so a warmed engine loses no semantics)
+        self.close()
         # a recorded determinism-sanitizer trace belongs to the old
         # stream too — a reused engine starts a fresh, comparable trace
         _san.drop_trace(self)
+
+    def close(self) -> None:
+        """Shut down the expert's worker pool, if it has one
+        (idempotent; the pool is rebuilt lazily on the next submit)."""
+        close = getattr(self.expert, "close", None)
+        if close is not None:
+            close()
+
+    def __del__(self):  # best-effort: don't leak expert workers at GC
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -- aggregates -----------------------------------------------------
     @property
@@ -601,6 +683,77 @@ class BatchedCascadeEngine:
         if poll is not None:
             return np.asarray(poll(ticket, block=True), np.int32)
         return np.asarray(ticket.result(), np.int32)
+
+    # -- failure semantics: requeue deadline + graceful degradation ------
+    def _resolve_labels(self, rec: _PendingTick, lo: int,
+                        hi: int) -> np.ndarray:
+        """Labels for called items ``[lo, hi)`` of a pending record,
+        surviving shard failures.
+
+        ``expert_timeout`` bounds the wait on each shard (the D-tick
+        commit bound becomes a *deadline*, not an assumption about the
+        expert).  A timed-out or dead-worker shard is requeued to
+        another worker; after ``max_requeues`` retries it is
+        force-resolved to the ``-1`` dropped-annotation sentinel
+        (counted in ``fault_stats["dropped_annotations"]``), so this
+        ALWAYS returns and commits never deadlock.  Annotation labels
+        are deterministic functions of the items (both expert kinds),
+        so a successful requeue yields the exact labels the original
+        shard would have — fault timing never changes committed state,
+        only permanent drops do."""
+        while True:
+            try:
+                return np.asarray(rec.ticket.result_slice(
+                    lo, hi, timeout=self.expert_timeout), np.int32)
+            except ExpertShardError as e:
+                self._requeue_shard(rec, e)
+
+    def _requeue_shard(self, rec: _PendingTick, err: ExpertShardError):
+        k = rec.sel_c.size
+        lo = err.lo
+        hi = k if err.hi is None else err.hi
+        if isinstance(err, ExpertShardTimeout):
+            self.fault_stats["timeouts"] += 1
+        else:
+            self.fault_stats["worker_deaths"] += 1
+        tries = rec.requeues.get(lo, 0)
+        sub = getattr(self.expert, "submit", None)
+        if tries < self.max_requeues and sub is not None \
+                and rec.docs_k is not None:
+            rec.requeues[lo] = tries + 1
+            self.fault_stats["requeues"] += 1
+            # resubmit just the failed range as one fresh shard (a new
+            # submit sequence — a fresh worker, or for FlakyExpert a
+            # fresh scripted fault cell); not re-counted in expert_calls:
+            # the annotation was already requested and costed at route
+            rec.ticket.replace(lo, hi, sub(rec.idxs[lo:hi],
+                                           rec.docs_k[lo:hi]))
+        else:
+            # graceful degradation: the provisional student answer
+            # stands; the lost demonstration is counted, never silent
+            rec.ticket.force_resolve(lo, hi,
+                                     np.full(hi - lo, -1, np.int32))
+            self.fault_stats["dropped_annotations"] += hi - lo
+
+    # -- fleet autoscaling ----------------------------------------------
+    def _autoscale_tick(self) -> None:
+        """Queue-depth worker autoscaling, decided at the deterministic
+        tick boundary (dispatch time): the uncommitted deferred-item
+        count is a pure function of the commit schedule under the
+        default deterministic drain, so two runs of the same stream make
+        identical scale decisions regardless of worker timing — traces
+        stay comparable (``fleet_log`` records every decision).  Width
+        only changes future shard layouts, never labels, so autoscaling
+        preserves the bitwise-invariance contract."""
+        lo, hi = self.autoscale
+        depth = sum(r.sel_c.size - r.committed for r in self._pending)
+        target = min(hi, max(lo, -(-depth // _AUTOSCALE_ITEMS_PER_WORKER)))
+        cur = int(self.expert.workers)
+        if target != cur:
+            key = "scale_ups" if target > cur else "scale_downs"
+            self.fault_stats[key] += 1
+            self.expert.workers = target
+            self.fleet_log.append((self.t, int(target)))
 
     # -- one lockstep tick ----------------------------------------------
     def process_tick(self, indices: Sequence[int], docs, *,
@@ -756,6 +909,8 @@ class BatchedCascadeEngine:
         self.t += 1
         t = self.t
         self.pipeline_stats["submitted"] += 1
+        if self.autoscale is not None:
+            self._autoscale_tick()
 
         # lazy per-level featurization: a level's feature batch is only
         # built if some lane actually reaches it (mirrors the reference's
@@ -969,22 +1124,9 @@ class BatchedCascadeEngine:
                 probs_h[i, missing] = np.asarray(probs_d)[:missing.size]
                 dprob_h[i, missing] = np.asarray(dprob_d)[:missing.size]
 
-            ticket = self._expert_submit(
-                [rec.indices[s] for s in sel_c],
-                [docs[s] for s in sel_c])
-            if self.max_delay == 0:
-                # synchronous path: resolve inline — with the identical
-                # op sequence as ever (bitwise parity contract)
-                y_full[sel_c] = self._expert_poll(ticket)
-                predictions[sel_c] = y_full[sel_c]
-                resolved = True
-            else:
-                # deferred lanes emit the LAST student's prediction
-                # provisionally; the annotation lands max_delay ticks
-                # later.  The probs are the route-time calibration
-                # forwards — no extra serving compute
-                predictions[sel_c] = np.argmax(
-                    probs_h[nlev - 1, sel_c], axis=-1)
+            idxs_c = [rec.indices[s] for s in sel_c]
+            docs_c = [docs[s] for s in sel_c]
+            ticket = self._expert_submit(idxs_c, docs_c)
             prec = _PendingTick(
                 ticket=ticket, t=t, called=called.copy(), sel_c=sel_c,
                 feats=[scatter_feats(i) for i in range(nlev)],
@@ -993,7 +1135,28 @@ class BatchedCascadeEngine:
                     [rec.lane_cache[s] for s in sel_c]
                     if self.per_lane else None),
                 lanes=rec.lanes,
-                wall=time.time())
+                wall=time.time(),
+                idxs=idxs_c, docs_k=docs_c)
+            if self.max_delay == 0:
+                # synchronous path: resolve inline — with the identical
+                # op sequence as ever (bitwise parity contract).  The
+                # requeue-aware resolve means a fault here heals or
+                # degrades exactly like a deferred commit would; -1
+                # marks an annotation dropped past max_requeues, whose
+                # lane keeps the last student's provisional answer
+                y_lab = self._resolve_labels(prec, 0, sel_c.size)
+                y_full[sel_c] = y_lab
+                predictions[sel_c] = np.where(
+                    y_lab >= 0, y_lab,
+                    np.argmax(probs_h[nlev - 1, sel_c], axis=-1))
+                resolved = True
+            else:
+                # deferred lanes emit the LAST student's prediction
+                # provisionally; the annotation lands max_delay ticks
+                # later.  The probs are the route-time calibration
+                # forwards — no extra serving compute
+                predictions[sel_c] = np.argmax(
+                    probs_h[nlev - 1, sel_c], axis=-1)
 
         if prec is not None:
             self._pending.append(prec)
@@ -1069,11 +1232,24 @@ class BatchedCascadeEngine:
         an older tick's late ones — the deterministic global order the
         per-lane exactness contract rests on).  The head at age
         ``max_delay`` always commits fully, so the bound holds for every
-        record."""
+        record.
+
+        ``readiness_commits=True`` additionally commits the head
+        record's lanes as soon as their annotations have LANDED (before
+        their ``lanes_due`` sub-deadline): per-lane mode extends the due
+        cursor by the ready prefix, per-tick mode commits the whole head
+        once its ticket reports done.  FIFO (tick, lane) order is
+        untouched — only commit *timing* moves, so commit age drops
+        while the <= D bound and the exactly-once guarantee still hold;
+        the trade is that state now evolves with annotation latency
+        (the opt-in documented in the module docstring; the default
+        schedule stays bitwise latency-invariant)."""
         while self._pending:
             rec = self._pending[0]
             k = rec.sel_c.size
             due = lanes_due(k, t - rec.t, self.max_delay, self.per_lane)
+            if self.readiness_commits and due < k:
+                due = max(due, self._ready_count(rec))
             if due > rec.committed:
                 if self.per_lane:
                     for j in range(rec.committed, due):
@@ -1084,6 +1260,22 @@ class BatchedCascadeEngine:
                 break
             self._pending.popleft()
 
+    def _ready_count(self, rec: _PendingTick) -> int:
+        """Lanes of the head record committable right now because their
+        annotations already landed (readiness-commit mode).  Per-lane:
+        the contiguous ready prefix from the commit cursor (a later
+        ready lane still waits for earlier ones — FIFO); per-tick: all
+        or nothing on whole-ticket completion.  A hung (injected
+        "timeout") shard simply never reports ready — its lanes fall
+        back to the deadline path, which requeues or drops."""
+        k = rec.sel_c.size
+        if not self.per_lane:
+            return k if rec.ticket.done() else 0
+        j = rec.committed
+        while j < k and rec.ticket.item_done(j):
+            j += 1
+        return j
+
     def _record_commit(self, rec: _PendingTick, lanes, t: int) -> None:
         """Aggregate per-lane commit age/latency stats (and the per-lane
         commit log when enabled).  ``lanes`` are tick POSITIONS; the log
@@ -1093,6 +1285,8 @@ class BatchedCascadeEngine:
         n = len(lanes)
         self.commit_stats["lanes"] += n
         self.commit_stats["age_sum"] += n * (t - rec.t)
+        self.commit_stats["age_max"] = max(self.commit_stats["age_max"],
+                                           t - rec.t)
         self.commit_stats["wall_sum"] += n * (time.time() - rec.wall)
         if self.commit_log is not None:
             if rec.lanes is None:
@@ -1110,18 +1304,32 @@ class BatchedCascadeEngine:
         nlev = len(self.levels)
         sel_c = rec.sel_c
         k = sel_c.size
-        y_sel = self._expert_poll(rec.ticket)
+        y_sel = self._resolve_labels(rec, 0, k)
+        # -1 marks annotations dropped after max_requeues: those lanes
+        # contribute no demonstration — no cache insert, zero update
+        # weight, no commit record (the drop was already counted in
+        # fault_stats at force-resolve time).  In a fault-free run
+        # ok is all-True and this block is bitwise the original path.
+        ok = y_sel >= 0
+        k_ok = int(ok.sum())
+        if k_ok == 0:
+            rec.committed = k
+            return
+        called_eff = rec.called
+        if k_ok < k:
+            called_eff = rec.called.copy()
+            called_eff[sel_c[~ok]] = False
         S = rec.called.shape[0]
         y_full = np.zeros(S, np.int32)
-        y_full[sel_c] = y_sel
+        y_full[sel_c] = np.maximum(y_sel, 0)
 
         # host mirrors first: sampling sees the post-insert fill level
         ptr_pre = np.asarray(self._cache_ptr, np.int32)
         idx_t = []
         for i, lvl in enumerate(self.levels):
             size = lvl.spec.cache_size
-            self._cache_n[i] = min(self._cache_n[i] + k, size)
-            self._cache_ptr[i] = (self._cache_ptr[i] + k) % size
+            self._cache_n[i] = min(self._cache_n[i] + k_ok, size)
+            self._cache_ptr[i] = (self._cache_ptr[i] + k_ok) % size
             idx_t.append(jnp.asarray(sample_cache_indices(
                 rec.cache_rngs[i], self._cache_n[i],
                 self._bs_list[i]).astype(np.int32)))
@@ -1129,7 +1337,7 @@ class BatchedCascadeEngine:
         new_cx, new_cy = self._scatter(
             tuple(self._cache_x), tuple(self._cache_y),
             tuple(self._put_lane(rec.feats[i]) for i in range(nlev)),
-            self._put_lane(y_full), self._put_lane(rec.called),
+            self._put_lane(y_full), self._put_lane(called_eff),
             jnp.asarray(ptr_pre))
         self._cache_x = list(new_cx)
         self._cache_y = list(new_cy)
@@ -1141,8 +1349,8 @@ class BatchedCascadeEngine:
         reach = np.ones((nlev, S), np.float32)
         for i in range(1, nlev):
             reach[i] = reach[i - 1] * rec.dprob[i - 1]
-        k_arr = (jnp.asarray(float(k), jnp.float32)
-                 if self.updates_per_tick == "scaled" and k > 1 else None)
+        k_arr = (jnp.asarray(float(k_ok), jnp.float32)
+                 if self.updates_per_tick == "scaled" and k_ok > 1 else None)
         B_c = self._bucket(k)
         for i, lvl in enumerate(self.levels):
             xb = self._cache_x[i][idx_t[i]]
@@ -1152,16 +1360,16 @@ class BatchedCascadeEngine:
             probs_b = np.zeros((B_c, cfg.n_classes), np.float32)
             probs_b[:k] = rec.probs[i, sel_c]
             y_b = np.zeros(B_c, np.int32)
-            y_b[:k] = y_sel
+            y_b[:k] = np.maximum(y_sel, 0)
             reach_b = np.zeros(B_c, np.float32)
             reach_b[:k] = reach[i, sel_c]
             w_b = np.zeros(B_c, np.float32)
-            w_b[:k] = 1.0
+            w_b[:k] = ok.astype(np.float32)
             lvl.apply_deferral_update(
                 self._put_lane(probs_b), self._put_lane(y_b),
                 self._put_lane(reach_b), self._put_lane(w_b), k_arr)
         rec.committed = k
-        self._record_commit(rec, rec.sel_c, self.t if t is None else t)
+        self._record_commit(rec, sel_c[ok], self.t if t is None else t)
         # params/dparams changed: any route forward dispatched before
         # this commit is stale (the pipeline's resolve checks and
         # refetches against the new state)
@@ -1182,7 +1390,13 @@ class BatchedCascadeEngine:
         cfg = self.cfg
         nlev = len(self.levels)
         s = int(rec.sel_c[j])
-        y = rec.ticket.result_slice(j, j + 1)
+        y = self._resolve_labels(rec, j, j + 1)
+        if y[0] < 0:
+            # annotation dropped past max_requeues: no demonstration to
+            # apply — just advance the cursor (the drop was counted in
+            # fault_stats; no commit record, no state change)
+            rec.committed = j + 1
+            return
         S = rec.called.shape[0]
         y_full = np.zeros(S, np.int32)
         y_full[s] = y[0]
@@ -1260,6 +1474,181 @@ class BatchedCascadeEngine:
             n += 1
         return n
 
+    # -- live-state checkpointing (ARCHITECTURE.md §10) ------------------
+    def _fingerprint(self) -> dict:
+        """Config facts a checkpoint must agree on to be restorable."""
+        return {
+            "engine": "batched", "ckpt_version": _CKPT_VERSION,
+            "n_streams": self.n_streams, "n_levels": len(self.levels),
+            "max_delay": self.max_delay, "per_lane": self.per_lane,
+            "updates_per_tick": self.updates_per_tick,
+            "seed": self.cfg.seed, "n_classes": self.cfg.n_classes,
+        }
+
+    def save_state(self, path: str) -> str:
+        """Checkpoint the engine's full live state mid-stream.
+
+        Captures per-level STATE_ATTRS (params, optimizer state,
+        deferral MLPs) and gates (betas), the demonstration ring
+        buffers, per-lane accounting, the route-time beta/item
+        recurrence, commit stats/log, fault + fleet stats, and the
+        pending deferred-annotation queue — including each pending
+        record's exact mid-consumption cache-generator states, so a
+        restored engine replays the remaining commits with the very
+        draws the uninterrupted run would use (the bitwise resume
+        contract, tests/test_checkpoint.py).  Uncommitted annotations
+        are resolved here (blocking, under the requeue/timeout
+        discipline) so the checkpoint never holds an unresolvable
+        ticket.  The route ring must be drained first, like ``flush``.
+        """
+        if self._ring:
+            raise RuntimeError(
+                "route pipeline has in-flight ticks: drain() them "
+                "(and consume their outputs) before save_state()")
+        from repro.checkpoint import save_checkpoint
+        nlev = len(self.levels)
+        tree = {
+            "levels": [lvl.state_tree() for lvl in self.levels],
+            "cache_x": [np.asarray(jax.device_get(x))
+                        for x in self._cache_x],
+            "cache_y": [np.asarray(jax.device_get(y))
+                        for y in self._cache_y],
+            "acct": {
+                "expert_calls": self.expert_calls,
+                "total_cost": self.total_cost,
+                "level_counts": self.level_counts,
+                "items_seen": self.items_seen,
+                "J_cum": self.J_cum,
+            },
+        }
+        pending_meta = []
+        for r_i, rec in enumerate(list(self._pending)):
+            k = rec.sel_c.size
+            labels = np.full(k, -1, np.int32)
+            if rec.committed < k:
+                labels[rec.committed:] = self._resolve_labels(
+                    rec, rec.committed, k)
+            entry = {
+                "called": rec.called, "sel_c": rec.sel_c,
+                "labels": labels, "probs": rec.probs, "dprob": rec.dprob,
+                "feats": list(rec.feats),
+                "idxs": np.asarray(rec.idxs or [], np.int64),
+            }
+            if rec.lanes is not None:
+                entry["lanes"] = rec.lanes
+            tree[f"pending{r_i}"] = entry
+            pending_meta.append({
+                "t": rec.t, "committed": rec.committed,
+                "has_lanes": rec.lanes is not None,
+                "requeues": {str(lo): n
+                             for lo, n in rec.requeues.items()},
+                "cache_rngs": [generator_state(g)
+                               for g in rec.cache_rngs],
+                "lane_cache_rngs": (
+                    [[generator_state(g) for g in lane]
+                     for lane in rec.lane_cache_rngs]
+                    if rec.lane_cache_rngs is not None else None),
+            })
+        meta = {
+            **self._fingerprint(),
+            "t": self.t,
+            "beta": [float(lvl.beta) for lvl in self.levels],
+            "cache_n": list(self._cache_n),
+            "cache_ptr": list(self._cache_ptr),
+            "route_beta": [float(b) for b in self._route_beta],
+            "route_items": self._route_items,
+            "commit_stats": {"lanes": self.commit_stats["lanes"],
+                             "age_sum": self.commit_stats["age_sum"],
+                             "age_max": self.commit_stats["age_max"],
+                             "wall_sum": self.commit_stats["wall_sum"]},
+            "commit_log": ([list(e) for e in self.commit_log]
+                           if self.commit_log is not None else None),
+            "pipeline_stats": dict(self.pipeline_stats),
+            "fault_stats": dict(self.fault_stats),
+            "fleet_log": [list(e) for e in self.fleet_log],
+            "n_pending": len(self._pending),
+            "pending": pending_meta,
+        }
+        assert nlev == len(tree["levels"])
+        return save_checkpoint(path, tree, meta)
+
+    def restore_state(self, path: str) -> None:
+        """Restore a ``save_state`` checkpoint into this (freshly
+        constructed, same-config) engine; raises ``CheckpointError`` on
+        a config mismatch.  The resumed run is bitwise identical to the
+        uninterrupted one from the checkpoint tick onward."""
+        from repro.checkpoint import CheckpointError, restore_checkpoint
+        tree, meta = restore_checkpoint(path)
+        for key, val in self._fingerprint().items():
+            if meta.get(key) != val:
+                raise CheckpointError(
+                    f"checkpoint/engine mismatch on {key}: checkpoint "
+                    f"has {meta.get(key)!r}, engine has {val!r}")
+        for lvl, st, b in zip(self.levels, tree["levels"], meta["beta"]):
+            lvl.load_state_tree(st, put=self._put_rep)
+            lvl.beta = float(b)
+        self._cache_x = [self._put_rep(np.asarray(x))
+                         for x in tree["cache_x"]]
+        self._cache_y = [self._put_rep(np.asarray(y))
+                         for y in tree["cache_y"]]
+        self._cache_n = [int(v) for v in meta["cache_n"]]
+        self._cache_ptr = [int(v) for v in meta["cache_ptr"]]
+        acct = tree["acct"]
+        self.expert_calls[:] = np.asarray(acct["expert_calls"])
+        self.total_cost[:] = np.asarray(acct["total_cost"])
+        self.level_counts[:] = np.asarray(acct["level_counts"])
+        self.items_seen[:] = np.asarray(acct["items_seen"])
+        self.J_cum[:] = np.asarray(acct["J_cum"])
+        self.t = int(meta["t"])
+        self._route_beta = [float(b) for b in meta["route_beta"]]
+        self._route_items = int(meta["route_items"])
+        cs = meta["commit_stats"]
+        self.commit_stats = {"lanes": int(cs["lanes"]),
+                             "age_sum": int(cs["age_sum"]),
+                             "age_max": int(cs.get("age_max", 0)),
+                             "wall_sum": float(cs["wall_sum"])}
+        self.commit_log = ([tuple(e) for e in meta["commit_log"]]
+                           if meta["commit_log"] is not None else None)
+        self.pipeline_stats = {k: int(v)
+                               for k, v in meta["pipeline_stats"].items()}
+        self.fault_stats = {k: int(v)
+                            for k, v in meta["fault_stats"].items()}
+        self.fleet_log = [tuple(int(x) for x in e)
+                          for e in meta["fleet_log"]]
+        self._pending.clear()
+        for r_i, pm in enumerate(meta["pending"]):
+            pt = tree[f"pending{r_i}"]
+            self._pending.append(_PendingTick(
+                # the ticket was resolved at save time (labels hold the
+                # -1 sentinel where annotations were dropped), so the
+                # restored record never needs docs for a requeue
+                ticket=ExpertTicket(
+                    labels=np.asarray(pt["labels"], np.int32)),
+                t=int(pm["t"]),
+                called=np.asarray(pt["called"], bool),
+                sel_c=np.asarray(pt["sel_c"], np.int64),
+                feats=[np.asarray(f) for f in pt["feats"]],
+                probs=np.asarray(pt["probs"], np.float32),
+                dprob=np.asarray(pt["dprob"], np.float32),
+                cache_rngs=[generator_from_state(s)
+                            for s in pm["cache_rngs"]],
+                committed=int(pm["committed"]),
+                lane_cache_rngs=(
+                    [[generator_from_state(s) for s in lane]
+                     for lane in pm["lane_cache_rngs"]]
+                    if pm["lane_cache_rngs"] is not None else None),
+                lanes=(np.asarray(pt["lanes"], np.int64)
+                       if pm["has_lanes"] else None),
+                wall=time.time(),
+                idxs=[int(i) for i in np.asarray(pt["idxs"])],
+                docs_k=None,
+                requeues={int(lo): int(n)
+                          for lo, n in pm["requeues"].items()}))
+        # restored params invalidate anything dispatched before (there
+        # is nothing in flight, but a later pipelined dispatch must not
+        # compare equal to a pre-restore version)
+        self._state_version += 1
+
     # -- per-stream metrics ---------------------------------------------
     def stream_metrics(self) -> dict:
         """Independent per-lane accounting (S rows each)."""
@@ -1273,7 +1662,9 @@ class BatchedCascadeEngine:
         }
 
     # -- conveniences ----------------------------------------------------
-    def run(self, stream, log_every: int = 0) -> dict:
+    def run(self, stream, log_every: int = 0,
+            checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None) -> dict:
         """Serve an entire stream, tick-major: tick T covers items
         [T*S, T*S + S) with lane s = offset.  Returns OnlineCascade-style
         summary metrics plus throughput and per-stream accounting.
@@ -1282,11 +1673,20 @@ class BatchedCascadeEngine:
         ``submit_tick``/``drain`` — results land up to P ticks after
         submission and are mapped back through each output's "indices";
         with depth 0 it is the classic one-``process_tick``-per-tick
-        loop."""
+        loop.
+
+        ``checkpoint_every=k`` saves live state to ``checkpoint_path``
+        every k ticks (draining the route ring first — save_state's
+        precondition).  On an engine that already holds restored state
+        (``restore_state``), serving resumes at item ``self.t * S`` —
+        the tick-major identity — and metrics cover the items this call
+        served."""
         S = self.n_streams
         n = len(stream)
         preds = np.zeros(n, np.int32)
         done = 0                      # items with results already landed
+        first = self.t * S            # 0 on a fresh engine; resume point
+                                      # on a restored one
 
         def take(out):
             nonlocal done
@@ -1295,7 +1695,7 @@ class BatchedCascadeEngine:
             done = max(done, int(idxs.max()) + 1) if idxs.size else done
 
         t0 = time.time()
-        for start in range(0, n, S):
+        for start in range(first, n, S):
             stop = min(start + S, n)
             idxs = list(range(start, stop))
             docs = [stream.docs[i] for i in idxs]
@@ -1306,15 +1706,23 @@ class BatchedCascadeEngine:
                 take(self.process_tick(idxs, docs))
             if (log_every and done
                     and (stop // log_every) > (start // log_every)):
-                acc = float(np.mean(preds[:done] == stream.labels[:done]))
+                lo = min(first, done)
+                acc = float(np.mean(preds[lo:done]
+                                    == stream.labels[lo:done]))
                 print(f"[{done}/{n}] acc={acc:.4f} "
                       f"expert_calls={self.expert_calls_total}")
+            if (checkpoint_every and checkpoint_path
+                    and self.t % checkpoint_every == 0 and stop < n):
+                for out in self.drain():
+                    take(out)
+                self.save_state(checkpoint_path)
         for out in self.drain():
             take(out)
         self.flush()
         dt = time.time() - t0
         labels = stream.labels
-        acc = float(np.mean(preds == labels))
+        served = n - first
+        acc = float(np.mean(preds[first:] == labels[first:]))
         metrics = {
             "accuracy": acc,
             "expert_calls": self.expert_calls_total,
@@ -1322,7 +1730,7 @@ class BatchedCascadeEngine:
             "level_fractions": (self.level_counts.sum(axis=0)
                                 / max(n, 1)).tolist(),
             "predictions": preds,
-            "items_per_sec": n / max(dt, 1e-9),
+            "items_per_sec": served / max(dt, 1e-9),
             "per_stream": self.stream_metrics(),
         }
         return metrics

@@ -263,6 +263,27 @@ class _Level:
         self.cache_n = 0
         self.cache_ptr = 0
 
+    # -- checkpointing (checkpoint/ckpt.py via the engines' save_state) --
+    def state_tree(self) -> dict:
+        """The level's learned state as one checkpointable pytree
+        (STATE_ATTRS order: student params + opt state, deferral MLP
+        params + opt state)."""
+        return {a: getattr(self, a) for a in STATE_ATTRS}
+
+    def load_state_tree(self, tree: dict, put=None) -> None:
+        """Install a ``state_tree`` snapshot.  The restored containers
+        are rebuilt against the CURRENT attribute's treedef (optimizer
+        states may be tuples/namedtuples, which the npz round-trip
+        stores as lists); ``put`` re-places leaves on device (mesh
+        engines pass their replicated placement)."""
+        put = jnp.asarray if put is None else put
+        for a in STATE_ATTRS:
+            cur = getattr(self, a)
+            leaves = jax.tree_util.tree_leaves(tree[a])
+            treedef = jax.tree_util.tree_structure(cur)
+            setattr(self, a, jax.tree_util.tree_unflatten(
+                treedef, [put(np.asarray(x)) for x in leaves]))
+
     def _build_jits(self):
         spec, sspec, opt, dopt = self.spec, self.sspec, self.opt, self.dopt
 
@@ -472,6 +493,66 @@ class OnlineCascade:
         # a recorded determinism-sanitizer trace belongs to the old
         # stream too — a reused engine starts a fresh, comparable trace
         _san.drop_trace(self)
+
+    def close(self) -> None:
+        """Shut down the expert's worker pool, if it has one."""
+        close = getattr(self.expert, "close", None)
+        if close is not None:
+            close()
+
+    # -- live-state checkpointing (mirrors BatchedCascadeEngine's) ------
+    def _fingerprint(self) -> dict:
+        return {"engine": "sequential", "n_levels": len(self.levels),
+                "seed": self.cfg.seed, "n_classes": self.cfg.n_classes}
+
+    def save_state(self, path: str) -> str:
+        """Checkpoint learned + accounting state mid-stream.  The
+        sequential loop has no in-flight queue, so the snapshot is just
+        levels (STATE_ATTRS + beta + FIFO cache) and scalars; resuming
+        at item ``t`` replays the uninterrupted run bitwise (the
+        per-item RNG is a pure function of (seed, stream_id, t))."""
+        from repro.checkpoint import save_checkpoint
+        tree = {
+            "levels": [lvl.state_tree() for lvl in self.levels],
+            "cache_x": [lvl.cache_x.copy() for lvl in self.levels],
+            "cache_y": [lvl.cache_y.copy() for lvl in self.levels],
+            "level_counts": self.level_counts,
+        }
+        meta = {
+            **self._fingerprint(),
+            "t": self.t, "stream_id": self.stream_id,
+            "beta": [float(lvl.beta) for lvl in self.levels],
+            "cache_n": [lvl.cache_n for lvl in self.levels],
+            "cache_ptr": [lvl.cache_ptr for lvl in self.levels],
+            "expert_calls": self.expert_calls,
+            "total_cost": self.total_cost,
+            "J_cum": self.J_cum,
+        }
+        return save_checkpoint(path, tree, meta)
+
+    def restore_state(self, path: str) -> None:
+        """Restore a ``save_state`` checkpoint into this (same-config)
+        cascade; raises ``CheckpointError`` on a config mismatch."""
+        from repro.checkpoint import CheckpointError, restore_checkpoint
+        tree, meta = restore_checkpoint(path)
+        for key, val in self._fingerprint().items():
+            if meta.get(key) != val:
+                raise CheckpointError(
+                    f"checkpoint/engine mismatch on {key}: checkpoint "
+                    f"has {meta.get(key)!r}, engine has {val!r}")
+        for i, lvl in enumerate(self.levels):
+            lvl.load_state_tree(tree["levels"][i])
+            lvl.beta = float(meta["beta"][i])
+            lvl.cache_x[:] = np.asarray(tree["cache_x"][i])
+            lvl.cache_y[:] = np.asarray(tree["cache_y"][i])
+            lvl.cache_n = int(meta["cache_n"][i])
+            lvl.cache_ptr = int(meta["cache_ptr"][i])
+        self.level_counts[:] = np.asarray(tree["level_counts"])
+        self.t = int(meta["t"])
+        self.stream_id = int(meta["stream_id"])
+        self.expert_calls = int(meta["expert_calls"])
+        self.total_cost = float(meta["total_cost"])
+        self.J_cum = float(meta["J_cum"])
 
     # -- cost of deferring FROM level i (to i+1) -----------------------
     def _defer_cost(self, i: int) -> float:

@@ -47,6 +47,24 @@ def tick_rngs(seed: int, stream_id: int, t: int, n_levels: int) -> TickRngs:
     )
 
 
+def generator_state(rng: np.random.Generator) -> dict:
+    """JSON-able snapshot of a generator mid-stream (checkpointing).
+
+    The per-tick discipline makes most randomness reconstructible from
+    (seed, stream_id, t) alone, but a pending tick's cache generators may
+    have consumed draws (a partially committed per-lane record) — their
+    exact bit-generator state is what makes a resume-from-checkpoint run
+    bitwise identical to the uninterrupted one (checkpoint/ckpt.py)."""
+    return rng.bit_generator.state
+
+
+def generator_from_state(state: dict) -> np.random.Generator:
+    """Rebuild a generator from a ``generator_state`` snapshot."""
+    bg = getattr(np.random, state["bit_generator"])()
+    bg.state = state
+    return np.random.Generator(bg)
+
+
 def sample_cache_indices(rng: np.random.Generator, cache_n: int,
                          batch_size: int) -> np.ndarray:
     """Mini-batch indices over a cache holding ``cache_n`` items.

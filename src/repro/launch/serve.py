@@ -82,13 +82,32 @@ def probe_route(cascade: OnlineCascade, doc, tick: int) -> bool:
 
 
 def _make_expert(stream, n_classes, expert_kind, samples, seed,
-                 workers: int = 1):
+                 workers=1, backend: str = "thread"):
     if expert_kind == "model":
         print("training stand-in LLM expert ...", flush=True)
         return train_model_expert(stream, n_classes, epochs=2,
                                   max_samples=min(4000, samples), seed=seed,
-                                  workers=workers)
+                                  workers=workers, backend=backend)
+    if backend != "thread":
+        print(f"(simulated expert ignores --expert-backend {backend}: "
+              "table lookups need no process pool)")
     return SimulatedExpert(stream, "gpt-3.5-turbo", workers=workers)
+
+
+def parse_autoscale(spec: str):
+    """Parse ``--autoscale``: '' -> None, 'auto' -> (1, 8), 'LO:HI' ->
+    (LO, HI).  The engine scales the expert pool within these bounds off
+    queue depth, deterministically at tick boundaries."""
+    if not spec:
+        return None
+    if spec == "auto":
+        return (1, 8)
+    lo, _, hi = spec.partition(":")
+    try:
+        return (int(lo), int(hi))
+    except ValueError:
+        raise SystemExit(
+            f"--autoscale expects 'auto' or 'LO:HI', got {spec!r}")
 
 
 def serve_stream_batched(dataset: str, samples: int, mu: float,
@@ -101,7 +120,10 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                          arrivals: str = "none", lane_budget: int = 0,
                          admission: str = "queue", queue_limit: int = 0,
                          arrival_rate: float = 1.0, request_len: int = 8,
-                         burst_size: int = 8):
+                         burst_size: int = 8, expert_backend: str = "thread",
+                         expert_timeout=None, autoscale=None,
+                         checkpoint_every: int = 0,
+                         checkpoint_path: str = "", restore: str = ""):
     """Default serving path: the batched multi-stream engine.
 
     ``mesh`` (a jax Mesh, e.g. from ``launch.mesh.parse_mesh_spec``)
@@ -136,7 +158,9 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
     from repro.data import make_stream
     stream = make_stream(dataset, seed=seed, n_samples=samples)
     expert = _make_expert(stream, stream.spec.n_classes, expert_kind,
-                          samples, seed, workers=expert_workers)
+                          samples, seed,
+                          workers="auto" if autoscale else expert_workers,
+                          backend=expert_backend)
     if ladder == "default":
         cfg = default_cascade_config(n_classes=stream.spec.n_classes,
                                      mu=mu, seed=seed,
@@ -161,7 +185,13 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
                                   pipeline_depth=pipeline_depth,
                                   per_lane=per_lane,
                                   history_limit=0,
-                                  commit_log=arrivals != "none" or None)
+                                  commit_log=arrivals != "none" or None,
+                                  expert_timeout=expert_timeout,
+                                  autoscale=autoscale)
+    if restore:
+        engine.restore_state(restore)
+        print(f"restored live state from {restore} (resuming at tick "
+              f"{engine.t}, item {engine.t * engine.n_streams})")
     if arrivals != "none":
         return _serve_frontend(
             engine, stream, arrivals, admission=admission,
@@ -169,7 +199,9 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
             request_len=request_len, burst_size=burst_size, seed=seed,
             trace_out=trace_out)
     t0 = time.time()
-    metrics = engine.run(stream, log_every=log_every)
+    metrics = engine.run(stream, log_every=log_every,
+                         checkpoint_every=checkpoint_every,
+                         checkpoint_path=checkpoint_path)
     dt = time.time() - t0
     _save_trace(engine, trace_out)
     frac = metrics["expert_calls"] / len(stream)
@@ -192,6 +224,14 @@ def serve_stream_batched(dataset: str, samples: int, mu: float,
         print(f"annotation commits: {cs['lanes']} lanes, "
               f"mean age {cs['age_sum'] / cs['lanes']:.2f} ticks, "
               f"mean latency {cs['wall_sum'] / cs['lanes'] * 1e3:.1f} ms")
+    fs = engine.fault_stats
+    if any(fs.values()):
+        print(f"fault stats: timeouts={fs['timeouts']} "
+              f"worker_deaths={fs['worker_deaths']} "
+              f"requeues={fs['requeues']} "
+              f"dropped_annotations={fs['dropped_annotations']} "
+              f"fleet resizes={len(engine.fleet_log)} "
+              f"(final width {engine.expert.workers})")
     print(f"\nserved {len(stream)} queries in {dt:.1f}s "
           f"({metrics['items_per_sec']:.0f} items/s, {lanes})")
     print(f"accuracy={metrics['accuracy']:.4f}  "
@@ -428,6 +468,46 @@ def main():
                          "completion; annotations and routing are "
                          "invariant to W — only latency/throughput "
                          "change")
+    ap.add_argument("--expert-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="expert pool backend (batched engine, --expert "
+                         "model): 'thread' shares the in-process jit "
+                         "cache; 'process' isolates annotation workers "
+                         "in spawned processes (ModelExpert ships its "
+                         "params to each child once) so a worker crash "
+                         "cannot take the engine down — pair with "
+                         "--expert-timeout for full fault tolerance")
+    ap.add_argument("--expert-timeout", type=float, default=None,
+                    help="per-shard annotation deadline in seconds "
+                         "(batched engine): a shard that misses it is "
+                         "requeued to another worker (up to max_requeues "
+                         "times), then dropped gracefully — the lane "
+                         "commits its provisional student answer and "
+                         "the drop is counted in fault stats; default = "
+                         "wait forever (no requeue path)")
+    ap.add_argument("--autoscale", default="",
+                    help="elastic expert-fleet bounds 'LO:HI' (or "
+                         "'auto' = 1:8): the engine resizes the "
+                         "annotation pool within the bounds off pending "
+                         "queue depth, decided deterministically at "
+                         "tick boundaries (fleet log in fault stats); "
+                         "empty = fixed --expert-workers pool")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save live engine state every N ticks to "
+                         "--checkpoint-path (classic serving path): "
+                         "params, optimizer/deferral state, ring "
+                         "buffers, pending annotation queue and fault "
+                         "stats — resuming via --restore reproduces the "
+                         "uninterrupted run bitwise; 0 = off")
+    ap.add_argument("--checkpoint-path", default="",
+                    help="checkpoint prefix for --checkpoint-every "
+                         "(written atomically; also the --restore "
+                         "argument)")
+    ap.add_argument("--restore", default="",
+                    help="resume serving from a live-state checkpoint "
+                         "written by --checkpoint-every; the engine "
+                         "picks up at the saved tick and the finished "
+                         "run is bitwise the uninterrupted one")
     ap.add_argument("--per-lane-commit", action="store_true",
                     help="per-lane commit granularity (batched engine, "
                          "with --async-delay >= 2): each lane's "
@@ -528,7 +608,13 @@ def main():
                              queue_limit=args.queue_limit,
                              arrival_rate=args.arrival_rate,
                              request_len=args.request_len,
-                             burst_size=args.burst_size)
+                             burst_size=args.burst_size,
+                             expert_backend=args.expert_backend,
+                             expert_timeout=args.expert_timeout,
+                             autoscale=parse_autoscale(args.autoscale),
+                             checkpoint_every=args.checkpoint_every,
+                             checkpoint_path=args.checkpoint_path,
+                             restore=args.restore)
     else:
         serve_stream(args.dataset, args.samples, args.mu, args.microbatch,
                      expert_kind=args.expert, seed=args.seed,

@@ -191,6 +191,99 @@ def assert_run_parity(ref, m_ref, new, m_new, *, state="bitwise",
 
 
 # ---------------------------------------------------------------------------
+# chaos + checkpoint/resume helpers (tests/test_faults.py, test_checkpoint.py)
+# ---------------------------------------------------------------------------
+def flaky_engine(cfg, stream, n_streams=1, expert_kw=None, flaky_kw=None,
+                 **kw):
+    """A batched engine whose expert pool is wrapped in ``FlakyExpert``
+    (core/experts.py): ``flaky_kw`` carries the fault schedule/rates
+    (schedule=, timeout_rate=, death_rate=, slow_rate=, seed=),
+    ``expert_kw`` the inner pool (workers=, latency=).  The wrapper is
+    reachable as ``engine.expert`` (``.injected`` counts the faults)."""
+    from repro.core import FlakyExpert
+    inner = make_expert(stream, **(expert_kw or {}))
+    return BatchedCascadeEngine(cfg, FlakyExpert(inner, **(flaky_kw or {})),
+                                n_streams=n_streams, **kw)
+
+
+def run_ticks(engine, stream, lo, hi):
+    """Serve global ticks [lo, hi) (tick t = items [t*S, (t+1)*S)) and
+    return the outputs that resolved — with pipelining these may lag and
+    include older ticks'; each carries its own ``out["tick"]``."""
+    S = engine.n_streams
+    outs = []
+    for t in range(lo, hi):
+        idxs = np.arange(t * S, (t + 1) * S)
+        docs = [stream.docs[i] for i in idxs]
+        if engine.pipeline_depth:
+            outs.extend(engine.submit_tick(idxs, docs))
+        else:
+            outs.append(engine.process_tick(idxs, docs))
+    return outs
+
+
+def finish_run(engine, outs):
+    """Drain the route ring and flush pending annotations; extends and
+    returns ``outs`` (the run's complete output list)."""
+    outs.extend(engine.drain())
+    engine.flush()
+    return outs
+
+
+def collate_outputs(outs):
+    """Tick-sorted output arrays {predictions, levels, expert_called},
+    one row per item — the comparable form of a ``run_ticks`` run."""
+    outs = sorted(outs, key=lambda o: o["tick"])
+    return {
+        "predictions": np.concatenate(
+            [np.asarray(o["predictions"]) for o in outs]),
+        "levels": np.concatenate([np.asarray(o["levels"]) for o in outs]),
+        "expert_called": np.concatenate(
+            [np.asarray(o["expert_called"]) for o in outs]),
+    }
+
+
+def resume_pair(build, stream, n_ticks, cut, path):
+    """The checkpoint/resume parity scaffold: one uninterrupted run vs
+    a run checkpointed at tick ``cut``, restored into a FRESH engine
+    (``build()`` again) and finished.  Returns
+    ``(full_engine, full_outs, resumed_engine, resumed_outs)`` with both
+    output lists collated-comparable; callers assert bitwise equality
+    of outputs, level state, and expert-call accounting."""
+    full = build()
+    full_outs = finish_run(full, run_ticks(full, stream, 0, n_ticks))
+    part = build()
+    part_outs = run_ticks(part, stream, 0, cut)
+    part_outs.extend(part.drain())
+    part.save_state(path)
+    part.close()
+    resumed = build()
+    resumed.restore_state(path)
+    resumed_outs = finish_run(
+        resumed, run_ticks(resumed, stream, cut, n_ticks))
+    return full, full_outs, resumed, part_outs + resumed_outs
+
+
+def assert_resume_parity(full, full_outs, resumed, resumed_outs,
+                         state="bitwise"):
+    """Bitwise resume contract: identical collated outputs, identical
+    (or allclose, for mesh runs) level state, identical expert-call
+    accounting and costs."""
+    a, b = collate_outputs(full_outs), collate_outputs(resumed_outs)
+    for key in ("predictions", "levels", "expert_called"):
+        np.testing.assert_array_equal(a[key], b[key], err_msg=key)
+    if state == "bitwise":
+        assert_state_equal(full.levels, resumed.levels)
+    else:
+        assert_state_equal(full.levels, resumed.levels,
+                           rtol=MESH_RTOL, atol=MESH_ATOL)
+    np.testing.assert_array_equal(np.asarray(full.expert_calls),
+                                  np.asarray(resumed.expert_calls))
+    np.testing.assert_allclose(np.asarray(full.total_cost, np.float64),
+                               np.asarray(resumed.total_cost, np.float64))
+
+
+# ---------------------------------------------------------------------------
 # continuous-batching front-end (core/admission.py) helpers
 # ---------------------------------------------------------------------------
 def frontend_engine(cfg, stream, lane_budget, expert_kw=None, **kw):

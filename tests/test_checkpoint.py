@@ -1,9 +1,16 @@
-"""Checkpoint roundtrip tests."""
+"""Checkpoint roundtrip tests: pytree store (repro.checkpoint) plus the
+engines' live-state save/restore (bitwise resume parity — the contract
+that makes mid-stream preemption invisible)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+import harness as H
+from repro.checkpoint import (CheckpointError, restore_checkpoint,
+                              save_checkpoint)
 
 
 def test_roundtrip_nested(tmp_path):
@@ -44,3 +51,336 @@ def test_roundtrip_model_params(tmp_path):
         assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dtype pins: low-precision round trips must be bit-preserving
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_low_precision_roundtrip_bitwise(tmp_path, dtype):
+    """bfloat16 (stored via uint16 view) and float16 leaves round-trip
+    with exact bit patterns — including NaN payloads and subnormals."""
+    bits = np.array([0x0000, 0x0001, 0x7F80, 0x7FC1, 0x8000, 0x3F80,
+                     0xFF80, 0x0080], np.uint16)
+    arr = jnp.asarray(bits.view(np.float16)).astype(dtype) \
+        if dtype == jnp.float16 else jnp.asarray(bits).view(jnp.bfloat16)
+    path = str(tmp_path / "lp")
+    save_checkpoint(path, {"x": arr})
+    restored, _ = restore_checkpoint(path)
+    assert restored["x"].dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(restored["x"]).view(np.uint16),
+        np.asarray(arr).view(np.uint16))
+
+
+def test_empty_and_degenerate_trees(tmp_path):
+    for i, (tree, kind) in enumerate([({}, dict), ([], list),
+                                      (None, type(None))]):
+        path = str(tmp_path / f"empty{i}")
+        save_checkpoint(path, tree, metadata={"i": i})
+        restored, meta = restore_checkpoint(path)
+        assert isinstance(restored, kind) or restored is None
+        assert restored == tree or (tree is None and restored is None)
+        assert meta == {"i": i}
+
+
+def test_long_list_restores_in_numeric_order(tmp_path):
+    """Lists with > 10 elements must restore positionally (a
+    lexicographic '#10' < '#2' sort would scramble them)."""
+    tree = {"lst": [jnp.full((2,), i, jnp.int32) for i in range(13)]}
+    path = str(tmp_path / "lst")
+    save_checkpoint(path, tree)
+    restored, _ = restore_checkpoint(path)
+    assert len(restored["lst"]) == 13
+    for i, leaf in enumerate(restored["lst"]):
+        np.testing.assert_array_equal(np.asarray(leaf), [i, i])
+
+
+def test_metadata_fidelity(tmp_path):
+    meta = {"t": 42, "beta": [0.5, 0.25], "nested": {"a": [1, 2], "b":
+            "s"}, "f": 1.5, "flag": True, "none": None}
+    path = str(tmp_path / "meta")
+    save_checkpoint(path, {"x": jnp.zeros((1,))}, metadata=meta)
+    _, restored = restore_checkpoint(path)
+    assert restored == meta
+
+
+# ---------------------------------------------------------------------------
+# damage paths: corruption is an error, never silent garbage
+# ---------------------------------------------------------------------------
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(CheckpointError, match="manifest"):
+        restore_checkpoint(str(tmp_path / "nope"))
+
+
+def test_corrupted_manifest_raises(tmp_path):
+    path = str(tmp_path / "bad")
+    save_checkpoint(path, {"x": jnp.zeros((2,))})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError, match="corrupted manifest"):
+        restore_checkpoint(path)
+
+
+def test_missing_arrays_file_raises(tmp_path):
+    path = str(tmp_path / "partial")
+    save_checkpoint(path, {"x": jnp.zeros((2,))})
+    os.remove(os.path.join(path, "arrays.npz"))
+    with pytest.raises(CheckpointError, match="missing"):
+        restore_checkpoint(path)
+
+
+def test_truncated_arrays_file_raises(tmp_path):
+    path = str(tmp_path / "trunc")
+    save_checkpoint(path, {"x": jnp.arange(1024, dtype=jnp.float32)})
+    npz = os.path.join(path, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(CheckpointError):
+        restore_checkpoint(path)
+
+
+def test_manifest_array_mismatch_raises(tmp_path):
+    """An arrays.npz that lost a manifest-named array (torn write) is
+    reported as truncation, not a KeyError deep in numpy."""
+    path = str(tmp_path / "torn")
+    save_checkpoint(path, {"x": jnp.zeros((2,)), "y": jnp.ones((2,))})
+    data = dict(np.load(os.path.join(path, "arrays.npz")))
+    data.pop("y")
+    np.savez(os.path.join(path, "arrays"), **data)
+    with pytest.raises(CheckpointError, match="missing"):
+        restore_checkpoint(path)
+
+
+# ---------------------------------------------------------------------------
+# engine live-state checkpointing: save -> restore -> bitwise resume
+# ---------------------------------------------------------------------------
+N = 64
+MU = 3e-6
+
+
+def test_sequential_save_restore_bitwise(tmp_path):
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="hatespeech")
+    full = H.sequential_engine(cfg, stream)
+    for i in range(N):
+        full.process(i, stream.docs[i])
+
+    part = H.sequential_engine(cfg, stream)
+    for i in range(N // 2):
+        part.process(i, stream.docs[i])
+    path = str(tmp_path / "seq")
+    part.save_state(path)
+    resumed = H.sequential_engine(cfg, stream)
+    resumed.restore_state(path)
+    assert resumed.t == part.t
+    preds_full, preds_res = [], []
+    for i in range(N // 2, N):
+        preds_res.append(resumed.process(i, stream.docs[i])["prediction"])
+    full2 = H.sequential_engine(cfg, stream)
+    for i in range(N):
+        out = full2.process(i, stream.docs[i])
+        if i >= N // 2:
+            preds_full.append(out["prediction"])
+    assert preds_full == preds_res
+    H.assert_state_equal(full.levels, resumed.levels)
+    assert full.expert_calls == resumed.expert_calls
+    assert full.total_cost == resumed.total_cost
+
+
+def test_sequential_fingerprint_mismatch_raises(tmp_path):
+    stream, cfg = H.make_setup(mu=MU, n=16, dataset="hatespeech")
+    eng = H.sequential_engine(cfg, stream)
+    for i in range(8):
+        eng.process(i, stream.docs[i])
+    path = str(tmp_path / "fp")
+    eng.save_state(path)
+    import dataclasses
+    other_cfg = dataclasses.replace(cfg, seed=99)
+    other = H.sequential_engine(other_cfg, stream)
+    with pytest.raises(CheckpointError, match="mismatch"):
+        other.restore_state(path)
+
+
+@pytest.mark.parametrize("kw,cut,id_", [
+    (dict(n_streams=1), 32, "S1"),
+    (dict(n_streams=4, max_delay=2, expert_kw={"workers": 2,
+                                               "latency": 1}), 8, "D2"),
+    (dict(n_streams=4, max_delay=2, per_lane=True,
+          expert_kw={"workers": 2, "latency": 1}), 8, "D2-lane"),
+    (dict(n_streams=4, max_delay=2, pipeline_depth=1,
+          expert_kw={"workers": 2}), 8, "D2-P1"),
+], ids=lambda v: v if isinstance(v, str) else "")
+def test_engine_resume_bitwise(tmp_path, kw, cut, id_):
+    """The tentpole acceptance pin: a run interrupted by save_state and
+    resumed in a FRESH engine is bitwise the uninterrupted run —
+    predictions, levels, expert calls, params, opt state, costs — at
+    S=1 and at (D=2, P, per_lane) corners."""
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="imdb")
+    S = kw.get("n_streams", 1)
+    n_ticks = N // S
+
+    def build():
+        return H.batched_engine(cfg, stream, **kw)
+
+    got = H.resume_pair(build, stream, n_ticks, cut,
+                        str(tmp_path / "ck"))
+    H.assert_resume_parity(*got)
+
+
+@pytest.mark.multidevice
+def test_engine_resume_mesh_corner(tmp_path):
+    """(mesh, D=2, P=1, per_lane) corner: resume parity at the
+    documented SPMD float tolerance for state, exact for outputs."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI job)")
+    from repro.launch.mesh import make_mesh
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="imdb")
+    S = 8
+
+    def build():
+        return H.batched_engine(
+            cfg, stream, n_streams=S, max_delay=2, pipeline_depth=1,
+            per_lane=True, mesh=make_mesh((8, 1), ("data", "model")),
+            expert_kw={"workers": 2})
+
+    got = H.resume_pair(build, stream, N // S, 4, str(tmp_path / "ck"))
+    H.assert_resume_parity(*got, state="allclose")
+
+
+def test_engine_checkpoint_requires_drained_ring(tmp_path):
+    stream, cfg = H.make_setup(mu=MU, n=32, dataset="imdb")
+    eng = H.batched_engine(cfg, stream, n_streams=4, pipeline_depth=2)
+    H.run_ticks(eng, stream, 0, 4)
+    if len(eng._ring):
+        with pytest.raises(RuntimeError, match="in-flight"):
+            eng.save_state(str(tmp_path / "ck"))
+    eng.drain()
+    eng.save_state(str(tmp_path / "ck"))
+
+
+def test_engine_restore_fingerprint_mismatch(tmp_path):
+    stream, cfg = H.make_setup(mu=MU, n=32, dataset="imdb")
+    eng = H.batched_engine(cfg, stream, n_streams=4)
+    H.run_ticks(eng, stream, 0, 4)
+    path = str(tmp_path / "ck")
+    eng.save_state(path)
+    other = H.batched_engine(cfg, stream, n_streams=8)
+    with pytest.raises(CheckpointError, match="mismatch"):
+        other.restore_state(path)
+
+
+def test_run_checkpoint_every_and_restore_resume(tmp_path):
+    """engine.run(checkpoint_every=...) writes mid-run checkpoints; a
+    fresh engine restored from one finishes the stream with the same
+    final metrics as the uninterrupted run."""
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="hatespeech")
+    path = str(tmp_path / "live")
+    full = H.batched_engine(cfg, stream, n_streams=4, max_delay=2)
+    m_full = full.run(stream)
+
+    ck = H.batched_engine(cfg, stream, n_streams=4, max_delay=2)
+    ck.run(stream, checkpoint_every=8, checkpoint_path=path)
+    assert os.path.isdir(path)
+
+    resumed = H.batched_engine(cfg, stream, n_streams=4, max_delay=2)
+    resumed.restore_state(path)
+    assert 0 < resumed.t < N // 4
+    m_res = resumed.run(stream)
+    # the resumed tail serves items [t*S, N); its predictions match the
+    # full run's on that suffix, and final state is bitwise equal
+    first = (N // 4 - (N // 4 - resumed.t)) * 4  # = resumed-start item
+    np.testing.assert_array_equal(m_res["predictions"][first:],
+                                  m_full["predictions"][first:])
+    H.assert_state_equal(full.levels, resumed.levels)
+    np.testing.assert_array_equal(np.asarray(full.expert_calls),
+                                  np.asarray(resumed.expert_calls))
+
+
+def test_frontend_save_restore_resume(tmp_path):
+    """Admission front-end checkpoint: serve part of a schedule, save,
+    restore into a fresh front-end, finish — records and engine state
+    match the uninterrupted serve."""
+    from repro.data import poisson_requests
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="hatespeech")
+    reqs = poisson_requests(N, rate=0.8, mean_len=5, seed=3)
+
+    full_eng = H.frontend_engine(cfg, stream, 4, max_delay=2)
+    full_fe, full_m = H.run_frontend(full_eng, stream, reqs)
+
+    part_eng = H.frontend_engine(cfg, stream, 4, max_delay=2)
+    from repro.core import CascadeFrontEnd
+    part_fe = CascadeFrontEnd(part_eng, stream)
+    part_fe.serve(reqs, max_ticks=6, finalize=False)
+    path = str(tmp_path / "fe")
+    part_fe.save_state(path)
+
+    res_eng = H.frontend_engine(cfg, stream, 4, max_delay=2)
+    res_fe = CascadeFrontEnd(res_eng, stream)
+    res_fe.restore_state(path, reqs)
+    res_fe.serve(reqs)
+    m_res = res_fe.metrics()
+
+    assert res_fe.admission_log == full_fe.admission_log
+    np.testing.assert_array_equal(m_res["predictions"],
+                                  full_m["predictions"])
+    for rid, rec in full_fe.records.items():
+        other = res_fe.records[rid]
+        assert (rec.admit, rec.done, rec.retired, rec.lane) == \
+            (other.admit, other.done, other.retired, other.lane)
+        assert rec.predictions == other.predictions
+    H.assert_state_equal(full_eng.levels, res_eng.levels)
+
+
+def test_frontend_restore_policy_mismatch(tmp_path):
+    from repro.core import CascadeFrontEnd
+    from repro.data import poisson_requests
+    stream, cfg = H.make_setup(mu=MU, n=32, dataset="hatespeech")
+    reqs = poisson_requests(32, rate=0.8, mean_len=4, seed=1)
+    eng = H.frontend_engine(cfg, stream, 4)
+    fe = CascadeFrontEnd(eng, stream)
+    fe.serve(reqs, max_ticks=3, finalize=False)
+    path = str(tmp_path / "fe")
+    fe.save_state(path)
+    other = CascadeFrontEnd(H.frontend_engine(cfg, stream, 4), stream,
+                            admission="shed", queue_limit=2)
+    with pytest.raises(ValueError, match="policy mismatch"):
+        other.restore_state(path, reqs)
+
+
+def test_trace_concat_across_restore(tmp_path):
+    """docs/ANALYSIS.md 'tracing across restore': the pre-checkpoint
+    trace concatenated with the resumed engine's trace equals the
+    uninterrupted run's trace (cascade-san concat_traces)."""
+    from repro.analysis import sanitize as _san
+    stream, cfg = H.make_setup(mu=MU, n=N, dataset="imdb")
+    S, cut = 4, 8
+
+    def build():
+        return H.batched_engine(cfg, stream, n_streams=S, max_delay=2)
+
+    with _san.determinism_trace():
+        full = build()
+        H.finish_run(full, H.run_ticks(full, stream, 0, N // S))
+
+        part = build()
+        H.run_ticks(part, stream, 0, cut)
+        part.drain()
+        path = str(tmp_path / "tr")
+        part.save_state(path)
+        resumed = build()
+        resumed.restore_state(path)
+        H.finish_run(resumed, H.run_ticks(resumed, stream, cut, N // S))
+
+    joined = _san.concat_traces(_san.trace_of(part),
+                                _san.trace_of(resumed))
+    div = _san.diff_traces(_san.trace_of(full), joined)
+    assert div is None, div.describe()
+
+
+def test_trace_concat_rejects_gap():
+    from repro.analysis import sanitize as _san
+    a, b = _san.Trace(), _san.Trace()
+    a.append({"t": 3})
+    b.append({"t": 7})
+    with pytest.raises(ValueError, match="abut"):
+        _san.concat_traces(a, b)

@@ -17,8 +17,8 @@ import numpy as np
 import pytest
 
 from harness import (MESH_ATOL, MESH_RTOL, assert_run_parity,
-                     assert_state_equal, batched_engine, frontend_engine,
-                     run_frontend)
+                     assert_state_equal, batched_engine, flaky_engine,
+                     frontend_engine, run_frontend)
 from repro.core import CascadeConfig, LevelSpec
 from repro.data import make_stream, poisson_requests
 from repro.models.students import MLPSpec
@@ -184,6 +184,74 @@ def test_admission_cell(mesh_kind, max_delay, depth, workers):
         assert_state_equal(ref_eng.levels, eng.levels)
     else:
         assert_state_equal(ref_eng.levels, eng.levels,
+                           attrs=("params", "dparams"),
+                           rtol=MESH_RTOL, atol=MESH_ATOL)
+    assert len(eng._pending) == 0 and len(eng._ring) == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos cells: requeue/fault injection across the execution axes — a
+# recovering fault schedule must leave every cell bitwise (or SPMD-
+# tolerance) equal to its fault-free twin (tests/test_faults.py holds
+# the schedule-level chaos contracts; these cells compose them with
+# mesh/pipeline/per-lane)
+# ---------------------------------------------------------------------------
+def _recovering_schedule():
+    """First attempt of every 4th submit's shard 0 times out; retries
+    (fresh submit seqs) succeed — all annotations eventually land."""
+    seen = set()
+
+    def schedule(seq, j):
+        if j == 0 and seq % 4 == 0 and seq not in seen:
+            seen.add(seq)
+            return "timeout"
+        return None
+
+    return schedule
+
+
+def _chaos_cells():
+    cells = []
+    for mesh, p, per_lane in (("none", 0, False), ("none", 0, True),
+                              ("none", 2, False), ("data8", 0, False),
+                              ("data8", 2, True)):
+        marks = [pytest.mark.multidevice] if mesh == "data8" else []
+        cells.append(pytest.param(
+            mesh, p, per_lane, marks=marks,
+            id=f"chaos-{mesh}-P{p}-{'lane' if per_lane else 'tick'}"))
+    return cells
+
+
+@pytest.mark.parametrize("mesh_kind,depth,per_lane", _chaos_cells())
+def test_chaos_cell(mesh_kind, depth, per_lane):
+    """Injected-but-recovering faults are a pure execution axis: the
+    requeue path re-derives identical labels, so the cell matches its
+    fault-free twin and every fault is accounted in fault_stats."""
+    if mesh_kind == "data8" and len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI job: "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    stream, cfg = _stream_cfg()
+    mesh = None
+    if mesh_kind == "data8":
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8, 1), ("data", "model"))
+    ref = batched_engine(cfg, stream, n_streams=S, max_delay=2,
+                         per_lane=per_lane, expert_kw={"workers": 2})
+    m_ref = ref.run(stream)
+    eng = flaky_engine(cfg, stream, n_streams=S, mesh=mesh, max_delay=2,
+                       pipeline_depth=depth, per_lane=per_lane,
+                       expert_kw={"workers": 2},
+                       flaky_kw={"schedule": _recovering_schedule()},
+                       expert_timeout=0.01, max_requeues=3)
+    m = eng.run(stream)
+    assert eng.fault_stats["timeouts"] > 0
+    assert eng.fault_stats["requeues"] == eng.fault_stats["timeouts"]
+    assert eng.fault_stats["dropped_annotations"] == 0
+    np.testing.assert_array_equal(m_ref["predictions"], m["predictions"])
+    if mesh is None:
+        assert_state_equal(ref.levels, eng.levels)
+    else:
+        assert_state_equal(ref.levels, eng.levels,
                            attrs=("params", "dparams"),
                            rtol=MESH_RTOL, atol=MESH_ATOL)
     assert len(eng._pending) == 0 and len(eng._ring) == 0
